@@ -1,0 +1,256 @@
+"""Paper-fidelity benchmarks: one per SpecInF figure (Fig. 4-8).
+
+Workloads mirror §5.1: DP trains BERT-base / RoBERTa-large, MP/PP fine-tune
+LLaMA2-7B / ChatGLM-6B; collocated inference uses ResNet152 / VGG19 /
+BERT-base / RoBERTa-large / GPT2-large.  All five policies run on the same
+calibrated timeline (A100-40G constants, bubble fractions from Fig. 1);
+SpecInF runs the REAL BubbleMonitor + Algorithm-1 scheduler.
+
+Each function returns CSV-ish rows: (figure, case, policy, metric, value).
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.configs.base import SpecInFConfig
+from repro.core.hardware import A100_40G
+from repro.core.profiles import (
+    analytic_inference_profile,
+    analytic_iteration,
+    cv_profile,
+)
+from repro.core.queues import RequestQueue, poisson_arrivals
+from repro.core.simulator import Calibration, make_policy, simulate
+
+CAL = Calibration()
+# A100-40GB testbed; busy_hold_ms=0 -> hold for the profiled max bubble
+# (the paper's CKS "preemptively sets the status to busy, according to
+# profiling information on training iteration time", §3.3)
+SPEC = SpecInFConfig(hbm_limit_bytes=40 * 1024**3, busy_hold_ms=0.0)
+POLICIES = ("specinf", "mps", "tgs", "co-exec", "exclusive")
+DURATION = 40.0
+
+# Fig. 1 measured bubble fractions per mode
+BUBBLE_FRACTION = {"dp": 0.30, "mp": 0.35, "pp": 0.15}
+
+# training workloads per parallel mode (paper §5.1)
+TRAIN_CASES = {
+    "dp": ["bert-base", "roberta-large"],
+    "mp": ["llama2-7b", "chatglm-6b"],
+    "pp": ["llama2-7b", "chatglm-6b"],
+}
+# collocated inference workloads: (name, microstep seconds source)
+INFER_CASES = ["resnet152", "bert-base", "gpt2-large"]
+
+
+def _profile(mode: str, train_name: str, target_compute_s: float = 0.0):
+    """Iteration profile sized to the paper's testbed: Fig. 1a shows ~1-1.5s
+    DP iterations, Fig. 1b ~3s LLaMA2 MP iterations (§3.3 cites 1.5s);
+    per-device batch solved from the model size."""
+    if not target_compute_s:
+        target_compute_s = 1.0 if mode == "dp" else 3.0
+    cfg = configs.PAPER_MODELS[train_name]
+    n = cfg.param_count()
+    tokens = target_compute_s * A100_40G.peak_flops * A100_40G.mfu_assumption / (6 * n)
+    pdb = max(4, int(tokens / 512))
+    return analytic_iteration(
+        cfg, seq_len=512, per_device_batch=pdb, num_devices=4, mode=mode,
+        hw=A100_40G, target_bubble_fraction=BUBBLE_FRACTION[mode],
+    )
+
+
+# Measured-magnitude A100 microstep latencies (batch-8 for CV, batch-8/128
+# tokens for NLP).  The paper reports its collocated inferences at "the 50ms
+# level" (§2.2); the pure-FLOPs estimate is 10-30x optimistic for small-batch
+# inference (launch overheads, low MFU), so the simulator uses these
+# calibrated values and keeps the analytic model as a lower-bound fallback.
+MICROSTEP_S = {
+    "resnet152": 0.025,
+    "vgg19": 0.035,
+    "bert-base": 0.015,
+    "roberta-large": 0.040,
+    "gpt2-large": 0.050,
+}
+
+
+def _microstep_s(infer_name: str) -> float:
+    if infer_name in MICROSTEP_S:
+        return MICROSTEP_S[infer_name]
+    if infer_name in ("resnet152", "vgg19"):
+        return cv_profile(infer_name, A100_40G).min_exec_time_s
+    cfg = configs.PAPER_MODELS[infer_name]
+    return analytic_inference_profile(
+        cfg, batch=8, seq_or_context=128, hw=A100_40G, kind="batch_infer"
+    ).min_exec_time_s
+
+
+def _sim(policy, profile, **kw):
+    return simulate(
+        profile, make_policy(policy, SPEC), duration_s=DURATION,
+        cal=CAL, specinf_cfg=SPEC, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4(a)/5(a)/6(a): offline inference filling per parallel mode
+# ---------------------------------------------------------------------------
+
+
+def bench_offline(mode: str):
+    rows = []
+    fig = {"dp": "fig4a", "mp": "fig5a", "pp": "fig6a"}[mode]
+    for train_name in TRAIN_CASES[mode]:
+        profile = _profile(mode, train_name)
+        for infer_name in INFER_CASES:
+            ms = _microstep_s(infer_name)
+            case = f"{mode}:{train_name}+{infer_name}"
+            for pol in POLICIES:
+                r = _sim(pol, profile, offline_instances=1,
+                         offline_microstep_s=ms)
+                rows.append((fig, case, pol, "train_norm",
+                             round(r.train_throughput_norm, 4)))
+                rows.append((fig, case, pol, "offline_norm",
+                             round(r.offline_norm, 4)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4(b)/5(b)/6(b): online inference p95 per parallel mode
+# ---------------------------------------------------------------------------
+
+
+def bench_online(mode: str):
+    """Two load points per case: ``light`` (5 rps — queueing-free, measures
+    scheduling latency) and ``paper`` (33 rps — the paper's RoBERTa-CV
+    'mean value ... set to 30' saturating regime, measures effective
+    bubble-service capacity).  3 collocated online instances per §3.3:
+    after a pull flips one instance busy, 'requests are handled by other
+    inference instances'."""
+    rows = []
+    fig = {"dp": "fig4b", "mp": "fig5b", "pp": "fig6b"}[mode]
+    for train_name in TRAIN_CASES[mode]:
+        profile = _profile(mode, train_name)
+        for infer_name in INFER_CASES[:2]:
+            service = _microstep_s(infer_name)
+            for load, interval, n_req in (
+                ("light", 0.200, 200), ("paper", 0.030, 1000),
+            ):
+                case = f"{mode}:{train_name}+{infer_name}:{load}"
+                for pol in POLICIES:
+                    q = RequestQueue(poisson_arrivals(
+                        mean_interval_s=interval, num_requests=n_req,
+                        service_s=service, seed=7,
+                    ))
+                    r = _sim(pol, profile, online_queue=q, online_instances=3)
+                    rows.append((fig, case, pol, "train_norm",
+                                 round(r.train_throughput_norm, 4)))
+                    rows.append((fig, case, pol, "online_p95_ms",
+                                 round(r.online_p95_s * 1e3, 2)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: multi-instance scaling (RoBERTa-ResNet DP, ChatGLM-BERT MP)
+# ---------------------------------------------------------------------------
+
+
+def bench_multi_instance():
+    rows = []
+    cases = [
+        ("fig7a", "dp", "roberta-large", "resnet152", 30),
+        ("fig7b", "mp", "chatglm-6b", "bert-base", 30),
+    ]
+    for fig, mode, train_name, infer_name, _mean in cases:
+        profile = _profile(mode, train_name)
+        ms = _microstep_s(infer_name)
+        for m in (1, 2, 3, 4):
+            for pol in ("specinf", "co-exec", "exclusive"):
+                r = _sim(pol, profile, offline_instances=m,
+                         offline_microstep_s=ms)
+                case = f"{mode}:{train_name}+{infer_name}x{m}"
+                rows.append((fig, case, pol, "train_norm",
+                             round(r.train_throughput_norm, 4)))
+                rows.append((fig, case, pol, "offline_agg_norm",
+                             round(r.offline_norm, 4)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: system overhead (collocated but idle inference)
+# ---------------------------------------------------------------------------
+
+
+def bench_overhead():
+    rows = []
+    for mode, train_name in (("dp", "bert-base"), ("mp", "chatglm-6b")):
+        profile = _profile(mode, train_name)
+        base = _sim("exclusive", profile)
+        idle = _sim("specinf", profile)  # monitor active, no inference work
+        overhead = 1.0 - idle.train_iterations / base.train_iterations
+        rows.append(("fig8", f"{mode}:{train_name}", "specinf",
+                     "overhead_frac", round(overhead, 4)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Headline derived claims (abstract): vs TGS / MPS
+# ---------------------------------------------------------------------------
+
+
+def bench_headline():
+    rows = []
+    # offline multiple vs TGS / MPS across DP cases
+    best_tgs, best_mps = 0.0, 0.0
+    for train_name in TRAIN_CASES["dp"]:
+        profile = _profile("dp", train_name)
+        for infer_name in INFER_CASES:
+            ms = _microstep_s(infer_name)
+            spec = _sim("specinf", profile, offline_instances=1,
+                        offline_microstep_s=ms)
+            tgs = _sim("tgs", profile, offline_instances=1,
+                       offline_microstep_s=ms)
+            mps = _sim("mps", profile, offline_instances=1,
+                       offline_microstep_s=ms)
+            if tgs.offline_throughput_per_s > 0:
+                best_tgs = max(
+                    best_tgs,
+                    spec.offline_throughput_per_s / tgs.offline_throughput_per_s,
+                )
+            best_mps = max(
+                best_mps,
+                spec.offline_throughput_per_s
+                / max(mps.offline_throughput_per_s, 1e-9),
+            )
+    rows.append(("headline", "dp", "specinf", "offline_vs_tgs_max_x",
+                 round(best_tgs, 2)))
+    rows.append(("headline", "dp", "specinf", "offline_vs_mps_max_x",
+                 round(best_mps, 2)))
+    # online p95 reduction vs MPS (best case)
+    best_red = 0.0
+    for train_name in TRAIN_CASES["dp"]:
+        profile = _profile("dp", train_name)
+        for infer_name in ("bert-base", "resnet152", "gpt2-large"):
+            service = _microstep_s(infer_name)
+            qs = {}
+            for pol in ("specinf", "mps"):
+                q = RequestQueue(poisson_arrivals(
+                    mean_interval_s=0.030, num_requests=1000,
+                    service_s=service, seed=11,
+                ))
+                qs[pol] = _sim(pol, profile, online_queue=q,
+                               online_instances=3)
+            red = 1.0 - qs["specinf"].online_p95_s / qs["mps"].online_p95_s
+            best_red = max(best_red, red)
+    rows.append(("headline", "dp", "specinf", "p95_reduction_vs_mps_max",
+                 round(best_red, 3)))
+    return rows
+
+
+def all_rows():
+    rows = []
+    for mode in ("dp", "mp", "pp"):
+        rows += bench_offline(mode)
+        rows += bench_online(mode)
+    rows += bench_multi_instance()
+    rows += bench_overhead()
+    rows += bench_headline()
+    return rows

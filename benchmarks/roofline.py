@@ -1,0 +1,80 @@
+"""Roofline table + perf-iteration helpers over the dry-run artifacts.
+
+Reads ``results/dryrun/<mesh>/<arch>__<shape>.json`` (written by
+``repro.launch.dryrun``) and emits the §Roofline table: three terms,
+dominant bottleneck, 6ND/HLO useful-FLOPs ratio, and the HBM fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+MESH_DIRS = {"single": "pod_16x16", "multi": "multipod_2x16x16"}
+
+
+def load_cells(results_dir: str = "results/dryrun", mesh: str = "single"):
+    cells = {}
+    pattern = os.path.join(results_dir, MESH_DIRS[mesh], "*.json")
+    for path in sorted(glob.glob(pattern)):
+        r = json.load(open(path))
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def table_rows(results_dir: str = "results/dryrun", mesh: str = "single"):
+    rows = []
+    for (arch, shape), r in load_cells(results_dir, mesh).items():
+        if r.get("skipped"):
+            rows.append((f"roofline/{mesh}", f"{arch}:{shape}", "-", "skipped", 1))
+            continue
+        ro = r["roofline"]
+        case = f"{arch}:{shape}"
+        fig = f"roofline/{mesh}"
+        rows.append((fig, case, ro["dominant"], "compute_ms",
+                     round(ro["compute_s"] * 1e3, 2)))
+        rows.append((fig, case, ro["dominant"], "memory_ms",
+                     round(ro["memory_s"] * 1e3, 2)))
+        rows.append((fig, case, ro["dominant"], "collective_ms",
+                     round(ro["collective_s"] * 1e3, 2)))
+        rows.append((fig, case, ro["dominant"], "useful_flops_ratio",
+                     round(ro["useful_flops_ratio"], 4)))
+        rows.append((fig, case, ro["dominant"], "hbm_gib",
+                     round(r["memory"]["peak_bytes_per_device"] / 2**30, 2)))
+    return rows
+
+
+def roofline_fraction(r: dict) -> float:
+    """Useful-work fraction of the roofline bound: what share of the
+    bound-step time is irreducible model compute at peak.
+
+      fraction = (model_flops / (chips * peak)) / max(compute, memory, coll)
+    """
+    ro = r["roofline"]
+    ideal_s = ro["model_flops"] / (r["n_devices"] * 197e12)
+    return ideal_s / max(ro["bound_s"], 1e-30)
+
+
+def summarize(results_dir: str = "results/dryrun") -> str:
+    lines = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(results_dir, mesh)
+        ok = [r for r in cells.values() if not r.get("skipped")]
+        if not ok:
+            continue
+        fits = sum(1 for r in ok if r.get("hbm_ok"))
+        lines.append(
+            f"{mesh}: {len(ok)} compiled cells, {fits}/{len(ok)} fit 16GiB HBM"
+        )
+        worst = sorted(ok, key=roofline_fraction)[:3]
+        for r in worst:
+            lines.append(
+                f"  worst roofline fraction: {r['arch']}:{r['shape']}"
+                f" = {roofline_fraction(r):.4f} (dominant "
+                f"{r['roofline']['dominant']})"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summarize())

@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+roofline table.  Prints ``figure,case,policy,metric,value`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig4a roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="figure prefixes to run (fig4a ... fig8, headline, "
+                         "roofline, micro)")
+    ap.add_argument("--results-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    want = lambda name: args.only is None or any(
+        name.startswith(o) for o in args.only
+    )
+
+    t0 = time.time()
+    rows = []
+
+    from benchmarks import paper_fidelity as PF
+
+    for mode, fa, fb in (("dp", "fig4a", "fig4b"),
+                         ("mp", "fig5a", "fig5b"),
+                         ("pp", "fig6a", "fig6b")):
+        if want(fa):
+            rows += PF.bench_offline(mode)
+        if want(fb):
+            rows += PF.bench_online(mode)
+    if want("fig7"):
+        rows += PF.bench_multi_instance()
+    if want("fig8"):
+        rows += PF.bench_overhead()
+    if want("headline"):
+        rows += PF.bench_headline()
+    if want("micro"):
+        from benchmarks import engine_micro
+
+        rows += engine_micro.all_rows()
+    if want("roofline"):
+        from benchmarks import roofline
+
+        for mesh in ("single", "multi"):
+            try:
+                rows += roofline.table_rows(args.results_dir, mesh)
+            except FileNotFoundError:
+                print(f"# roofline/{mesh}: no dry-run artifacts, skipping",
+                      file=sys.stderr)
+
+    print("figure,case,policy,metric,value")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(f"# {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing: atomic, async, restorable mid-run.
+
+Layout:  <dir>/step_<N>/
+           manifest.json   {"step": N, "complete": true, "tree": <structure>}
+           arrays.npz      flattened leaves keyed by tree path
+
+Guarantees used by the train loop's failure-recovery path:
+  * atomicity     -- written to ``step_<N>.tmp`` then os.rename (POSIX atomic)
+  * completeness  -- manifest written last; restore ignores dirs without it
+  * async         -- ``save(..., blocking=False)`` snapshots to host memory
+                     synchronously (device -> np) then writes on a daemon
+                     thread, so the train step dispatch is not blocked
+  * retention     -- keeps the newest ``keep`` checkpoints, GCs the rest
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        self.wait()  # one in-flight async save at a time
+        flat = _flatten(tree)  # device -> host snapshot happens here
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(
+                    {"step": step, "complete": True, "tree": str(treedef)}, f
+                )
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if (
+                name.startswith("step_")
+                and not name.endswith(".tmp")
+                and os.path.exists(os.path.join(full, "manifest.json"))
+            ):
+                with open(os.path.join(full, "manifest.json")) as f:
+                    m = json.load(f)
+                if m.get("complete"):
+                    steps.append(int(m["step"]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, int]:
+        """Restore into the structure/dtypes/shardings of ``template``."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}", "arrays.npz")
+        data = np.load(path)
+        leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path_t, leaf in leaves_t:
+            key = "/".join(str(p) for p in path_t)
+            arr = data[key]
+            if hasattr(leaf, "sharding"):
+                arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out
+        )
+        return tree, step
+
+    # -- retention ------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )

@@ -1,0 +1,304 @@
+"""Config dataclasses for models, shapes, training, and SpecInF collocation.
+
+Every assigned architecture gets its own module (``src/repro/configs/<id>.py``)
+exporting ``CONFIG: ModelConfig``.  The registry in ``__init__`` resolves the
+public ``--arch`` ids (dashed) to those modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one decoder-style backbone.
+
+    ``family`` selects the block layout:
+      dense   -- attention + MLP every layer
+      moe     -- attention + top-k MoE every layer
+      ssm     -- Mamba block every layer (attention-free)
+      hybrid  -- Mamba2 blocks with a *shared* attention+MLP block applied
+                 every ``shared_attn_every`` layers (Zamba2 style)
+      audio   -- dense backbone over precomputed EnCodec frame embeddings
+      vlm     -- dense backbone over precomputed ViT patch embeddings + tokens
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM (Mamba) ---
+    ssm_state: int = 0
+    ssm_version: int = 0  # 1 = Mamba1 (falcon-mamba), 2 = Mamba2 (zamba2)
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64  # Mamba2 only
+    dt_rank: int = 0  # Mamba1 only; 0 -> ceil(d_model / 16)
+
+    # --- attention options ---
+    qkv_bias: bool = False  # qwen2 uses QKV bias
+    qk_norm: bool = False  # qwen3 normalizes q/k per head
+    rope_theta: float = 10_000.0
+    # physical q-head padding for tensor parallelism (0 = disabled): pads
+    # each GQA group to ``pad_heads_to // num_kv_heads`` physical slots and
+    # masks the padded heads, so a 28H/kv4 model runs as 32 slots (8/group,
+    # 7 real) and shards cleanly over a 16-way model axis.  Padded slots
+    # contribute nothing and receive zero gradients — the logical
+    # architecture is unchanged (see DESIGN.md §Perf / head padding).
+    pad_heads_to: int = 0
+
+    # --- norm options ---
+    norm_type: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    parametric_norm: bool = True  # olmo uses non-parametric LayerNorm
+
+    # --- hybrid (Zamba2) ---
+    shared_attn_every: int = 0  # apply the shared attn+MLP block every N layers
+
+    # --- modality frontend ---
+    embed_inputs: bool = False  # True: inputs are precomputed d_model embeddings
+
+    tie_embeddings: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def num_heads_physical(self) -> int:
+        """Physical q-head slots (>= num_heads when padded for TP)."""
+        if self.pad_heads_to:
+            assert self.pad_heads_to >= self.num_heads
+            assert self.pad_heads_to % max(self.num_kv_heads, 1) == 0
+            return self.pad_heads_to
+        return self.num_heads
+
+    @property
+    def padded_heads(self) -> bool:
+        return self.num_heads_physical != self.num_heads
+
+    def padded_for_tp(self, tp: int) -> "ModelConfig":
+        """Return a config whose physical q-head count divides ``tp`` (the
+        §Perf head-padding optimization); self when already divisible or no
+        padded layout exists."""
+        if self.num_heads == 0 or self.num_heads % tp == 0:
+            return self
+        kv = max(self.num_kv_heads, 1)
+        group = -(-self.num_heads // kv)  # logical heads per kv group
+        group_phys = group
+        while (kv * group_phys) % tp != 0:
+            group_phys += 1
+            if group_phys > 4 * group:  # no sane padding exists
+                return self
+        return dataclasses.replace(self, pad_heads_to=kv * group_phys)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        if self.dt_rank:
+            return self.dt_rank
+        return int(math.ceil(self.d_model / 16))
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        """Mamba2 head count (d_inner / ssm_head_dim)."""
+        if self.ssm_version != 2:
+            return 0
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when the arch can run the 500k long-context decode shape."""
+        return self.family in ("ssm", "hybrid")
+
+    # --- analytic parameter counts (used by collocation + roofline) ------
+    def param_count(self) -> int:
+        """Total parameters (analytic; cross-checked by tests vs real trees)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        n = 0
+        # embeddings (+ untied LM head)
+        n += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.parametric_norm:
+            n += d  # final norm
+        per_layer = 0
+        if self.family in ("dense", "moe", "audio", "vlm"):
+            per_layer += self._attn_params(d, hd)
+            if self.family == "moe":
+                per_layer += self.num_experts * 3 * d * self.d_ff  # gate/up/down
+                per_layer += d * self.num_experts  # router
+            else:
+                per_layer += 3 * d * self.d_ff
+            per_layer += 2 * d if self.parametric_norm else 0  # two norms
+            n += l * per_layer
+        elif self.family == "ssm":
+            n += l * (self._mamba1_params() + (d if self.parametric_norm else 0))
+        elif self.family == "hybrid":
+            n += l * (self._mamba2_params() + (d if self.parametric_norm else 0))
+            if self.shared_attn_every:
+                n += self._attn_params(d, hd) + 3 * d * self.d_ff + 2 * d
+        return n
+
+    def _attn_params(self, d: int, hd: int, physical: bool = True) -> int:
+        h = self.num_heads_physical if physical else self.num_heads
+        q = d * h * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = h * hd * d
+        b = (h + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        qk = 2 * hd if self.qk_norm else 0
+        return q + kv + o + b + qk
+
+    def _mamba1_params(self) -> int:
+        d, di, ds = self.d_model, self.d_inner, self.ssm_state
+        dtr = self.resolved_dt_rank
+        n = d * 2 * di  # in_proj -> (x, z)
+        n += di * self.ssm_conv + di  # depthwise conv + bias
+        n += di * (dtr + 2 * ds)  # x_proj -> (dt, B, C)
+        n += dtr * di + di  # dt_proj
+        n += di * ds + di  # A_log, D
+        n += di * d  # out_proj
+        return n
+
+    def _mamba2_params(self) -> int:
+        d, di, ds = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_num_heads
+        n = d * (2 * di + 2 * ds + nh)  # in_proj -> (z, x, B, C, dt)
+        n += (di + 2 * ds) * (self.ssm_conv + 1)  # conv over (x, B, C) + bias
+        n += nh * 3  # A_log, D, dt_bias
+        n += di  # gated RMSNorm weight
+        n += di * d  # out_proj
+        return n
+
+    def active_param_count(self) -> int:
+        """*Useful*-work parameters per token: excludes inactive experts
+        (MoE) and masked padding heads (TP head padding)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        if self.family != "moe":
+            if not self.padded_heads:
+                return self.param_count()
+            pad = self._attn_params(d, hd, True) - self._attn_params(d, hd, False)
+            if self.family == "hybrid" and self.shared_attn_every:
+                return self.param_count() - pad
+            return self.param_count() - l * pad
+        per_layer = self._attn_params(d, hd, physical=False)
+        per_layer += self.experts_per_token * 3 * d * self.d_ff
+        per_layer += d * self.num_experts
+        per_layer += 2 * d if self.parametric_norm else 0
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.parametric_norm:
+            n += d
+        return n + l * per_layer
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set for the LM family)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell is runnable; reason string when skipped."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (see DESIGN.md §5)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip_norm: float = 1.0
+    schedule: str = "cosine"  # "cosine" | "linear" | "constant"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat_policy: str = "none"  # "none" | "dots" | "full"
+    zero1: bool = False  # shard optimizer state over the data axis
+    fsdp: bool = True  # additionally shard big params over the data axis
+    layout: str = "tp"  # "tp" | "dp256" (model axis joins data parallelism)
+    grad_compression: str = "none"  # "none" | "int8_ef" (pod-axis error feedback)
+    microbatches: int = 1  # gradient accumulation (also PP-style chunking)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecInFConfig:
+    """Algorithm-1 and monitor parameters (paper §3.3)."""
+
+    alpha: int = 2  # conservative-phase threshold on the zero-count
+    beta: int = 3  # incremental/stable boundary
+    gamma: float = 2.0  # multiplicative token growth
+    lower_limit: float = 8.0  # LL: token cap in the incremental phase
+    upper_limit: float = 64.0  # UL: token cap in the stable phase
+    token_seed: float = 1.0  # tokens restart from this after a zero
+    window_ms: float = 2.0  # monitor sliding-window period (paper: 2ms)
+    window_len: int = 64  # sliding-window capacity
+    busy_hold_ms: float = 25.0  # per-instance busy hold after an online pull
+    # (0 -> hold for the profiled max bubble, the paper's iteration-profiled
+    # variant; 25ms default suits ~20ms services)
+    hbm_limit_bytes: int = 16 * 1024**3  # v5e HBM (Principle-I budget)
+    max_instances: int = 8
+
+
+def mesh_axes(multi_pod: bool = False) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")

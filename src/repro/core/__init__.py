@@ -1,0 +1,46 @@
+"""SpecInF core — the paper's contribution as a composable JAX-side system.
+
+Components (paper §3):
+  * BubbleMonitor            -- sliding-window idle detection (§3.3)
+  * AdaptiveKernelScheduler  -- Algorithm 1 (conservative/incremental/stable)
+  * plan_collocation         -- Principles I & II (§3.2)
+  * SpecInFRuntime           -- speculative filling over real JAX compute
+  * make_collocated_step     -- beyond-paper fused train+infer program
+  * simulator / baselines    -- calibrated timeline evaluation vs MPS / TGS /
+                                Co-Exec / Exclusive
+"""
+from repro.core.bubble_monitor import BubbleMonitor
+from repro.core.collocation import (
+    CollocationPlan,
+    InstanceProfile,
+    TrainingProfile,
+    plan_collocation,
+)
+from repro.core.filling import (
+    FillingMetrics,
+    SpecInFRuntime,
+    make_collocated_step,
+    pick_bucket,
+)
+from repro.core.scheduler import (
+    AdaptiveKernelScheduler,
+    Phase,
+    ScheduleDecision,
+    Status,
+)
+
+__all__ = [
+    "BubbleMonitor",
+    "AdaptiveKernelScheduler",
+    "Phase",
+    "Status",
+    "ScheduleDecision",
+    "plan_collocation",
+    "CollocationPlan",
+    "InstanceProfile",
+    "TrainingProfile",
+    "SpecInFRuntime",
+    "FillingMetrics",
+    "make_collocated_step",
+    "pick_bucket",
+]

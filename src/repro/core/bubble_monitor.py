@@ -1,0 +1,47 @@
+"""Bubble Monitor (paper §3.3) — sliding-window activity statistics.
+
+The GPU original hijacks CUDA launches via LD_PRELOAD and counts kernels per
+2 ms window.  The TPU adaptation (DESIGN.md §2) feeds the same statistic from
+a different source: per-window *device activity quanta* — in the calibrated
+simulator these come from the training timeline; in the live runtime from
+host timestamps around step dispatch; on real hardware they would come from
+the static collective schedule of the compiled step.  Everything downstream
+of ``observe()`` is source-agnostic and identical to the paper.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.configs.base import SpecInFConfig
+
+
+class BubbleMonitor:
+    """Counts per-window activity; reports the trailing run of zero windows."""
+
+    def __init__(self, cfg: SpecInFConfig):
+        self.cfg = cfg
+        self.window = collections.deque(maxlen=cfg.window_len)
+        self._zero_run = 0
+
+    def observe(self, activity_count: int) -> int:
+        """Record one window's activity count; returns current zero-count Z_c."""
+        self.window.append(activity_count)
+        if activity_count == 0:
+            self._zero_run += 1
+        else:
+            self._zero_run = 0
+        return self._zero_run
+
+    @property
+    def zero_count(self) -> int:
+        return self._zero_run
+
+    def utilization(self) -> float:
+        """Fraction of recent windows with activity (diagnostics only)."""
+        if not self.window:
+            return 0.0
+        return sum(1 for c in self.window if c > 0) / len(self.window)
+
+    def reset(self) -> None:
+        self.window.clear()
+        self._zero_run = 0

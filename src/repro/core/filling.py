@@ -1,0 +1,201 @@
+"""Speculative-filling executors binding real JAX compute to the paper's
+control plane (monitor -> Algorithm 1 -> barrier / pull-and-execute).
+
+Two modes (DESIGN.md §2):
+
+* ``SpecInFRuntime`` — host-interleaved: each training iteration dispatches
+  the real jitted train step, then the collective window (the bubble, whose
+  span comes from the iteration profile) is filled with real inference-engine
+  microsteps admitted by Algorithm 1.  On CPU the device serializes, so
+  *timing* flows on a virtual clock driven by the profile while *compute* is
+  real — functional truth with calibrated time (documented limitation).
+
+* ``make_collocated_step`` — the beyond-paper fused program: train_step and
+  k decode microsteps compiled into ONE jitted function with no data
+  dependence between them, so the XLA scheduler may overlap inference compute
+  with training collectives.  k is bucketed to avoid recompiles; Algorithm 1
+  picks the bucket each iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import SpecInFConfig
+from repro.core.bubble_monitor import BubbleMonitor
+from repro.core.profiles import IterationProfile
+from repro.core.scheduler import AdaptiveKernelScheduler, Status
+from repro.serving.engine import InferenceEngine, Request
+
+
+@dataclasses.dataclass
+class FillingMetrics:
+    train_iterations: int = 0
+    train_losses: list = dataclasses.field(default_factory=list)
+    offline_microsteps: int = 0
+    offline_tokens_generated: int = 0
+    online_served: int = 0
+    online_latencies_s: list = dataclasses.field(default_factory=list)
+    virtual_time_s: float = 0.0
+    phase_counts: dict = dataclasses.field(default_factory=dict)
+
+    def p95_latency_s(self) -> float:
+        if not self.online_latencies_s:
+            return float("nan")
+        return float(np.percentile(self.online_latencies_s, 95))
+
+
+class SpecInFRuntime:
+    """Collocates one training driver with inference engines on a device set,
+    running the deployable Algorithm-1 control plane over real JAX compute."""
+
+    def __init__(
+        self,
+        *,
+        train_step: Callable[[Any, Any], tuple[Any, Any]],  # (state, batch) -> (state, metrics)
+        train_state: Any,
+        batch_iter,
+        profile: IterationProfile,
+        engine: Optional[InferenceEngine] = None,
+        online_requests: Optional[list[Request]] = None,
+        cfg: SpecInFConfig = SpecInFConfig(),
+        decode_microstep_s: float = 0.005,
+    ):
+        self.train_step = train_step
+        self.state = train_state
+        self.batch_iter = batch_iter
+        self.profile = profile
+        self.engine = engine
+        self.cfg = cfg
+        self.monitor = BubbleMonitor(cfg)
+        self.scheduler = AdaptiveKernelScheduler(cfg, num_instances=1)
+        self.metrics = FillingMetrics()
+        self.decode_microstep_s = decode_microstep_s
+        self._online_pending = sorted(
+            online_requests or [], key=lambda r: r.arrival_time
+        )
+        self._window_s = cfg.window_ms / 1e3
+
+    # ------------------------------------------------------------------
+    def _advance_windows(self, span_s: float, activity: int) -> None:
+        """Feed the monitor/scheduler for every 2 ms window inside a span."""
+        n = max(1, int(round(span_s / self._window_s)))
+        for _ in range(n):
+            zc = self.monitor.observe(activity)
+            d = self.scheduler.update(zc)
+            ph = d.phase.value
+            self.metrics.phase_counts[ph] = self.metrics.phase_counts.get(ph, 0) + 1
+
+    def _fill_bubble(self, bubble_s: float) -> None:
+        """Run real engine microsteps inside a virtual bubble of bubble_s."""
+        if self.engine is None:
+            self.metrics.virtual_time_s += bubble_s
+            self._advance_windows(bubble_s, activity=0)
+            return
+        now = self.metrics.virtual_time_s
+        spent = 0.0
+        while spent < bubble_s:
+            zc = self.monitor.observe(0)
+            d = self.scheduler.update(zc)
+            ph = d.phase.value
+            self.metrics.phase_counts[ph] = self.metrics.phase_counts.get(ph, 0) + 1
+            step_cost = self.decode_microstep_s
+            cost_tokens = step_cost / 1e-3  # 1 token == 1 ms (KB metering)
+            did_work = False
+            # online pull-and-execute on idle signal
+            if d.status is Status.IDLE and self._online_pending and (
+                self._online_pending[0].arrival_time <= now + spent
+            ):
+                req = self._online_pending.pop(0)
+                ok = self.engine.add_request(req, now=now + spent)
+                if ok:
+                    while self.engine.slots[_slot_of(self.engine, req)] is not None:
+                        self.engine.decode_microstep(now=now + spent)
+                        spent += step_cost
+                        if spent >= bubble_s:
+                            break
+                    if req.finish_time is not None:
+                        self.metrics.online_served += 1
+                        self.metrics.online_latencies_s.append(
+                            req.finish_time - req.arrival_time
+                        )
+                    did_work = True
+            # offline microsteps under token metering
+            elif d.tokens >= cost_tokens and self.engine.num_active > 0:
+                finished = self.engine.decode_microstep(now=now + spent)
+                self.metrics.offline_microsteps += 1
+                self.metrics.offline_tokens_generated += self.engine.num_active + len(
+                    finished
+                )
+                did_work = True
+            spent += step_cost if did_work else self._window_s
+        self.metrics.virtual_time_s += bubble_s
+
+    # ------------------------------------------------------------------
+    def run(self, num_iterations: int) -> FillingMetrics:
+        for _ in range(num_iterations):
+            batch = next(self.batch_iter)
+            self.state, step_metrics = self.train_step(self.state, batch)
+            loss = step_metrics.get("loss")
+            if loss is not None:
+                self.metrics.train_losses.append(float(loss))
+            for kind, dur in self.profile.segments:
+                if kind == "compute":
+                    self.metrics.virtual_time_s += dur
+                    self._advance_windows(dur, activity=1)
+                else:
+                    self._fill_bubble(dur)
+            self.metrics.train_iterations += 1
+        return self.metrics
+
+
+def _slot_of(engine: InferenceEngine, req: Request) -> int:
+    for i, r in enumerate(engine.slots):
+        if r is req:
+            return i
+    return -1
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: fused collocated step (bucketed k)
+# ---------------------------------------------------------------------------
+
+
+def make_collocated_step(
+    train_step_fn: Callable,
+    decode_step_fn: Callable,
+    *,
+    k_buckets: tuple[int, ...] = (0, 1, 2, 4, 8),
+):
+    """Build jitted fused programs ``{k: fn}`` where fn runs the train step
+    plus k chained decode microsteps in one XLA program.  The decode chain
+    has no data dependence on the train step, so the latency-hiding scheduler
+    overlaps it with the training collectives (verified in §Perf by the
+    fused program's collective/compute schedule).
+    """
+
+    def fused(k):
+        def fn(train_state, batch, infer_params, tokens, cache):
+            new_state, metrics = train_step_fn(train_state, batch)
+            t, c = tokens, cache
+            for _ in range(k):
+                logits, c = decode_step_fn(infer_params, t, c)
+                t = jax.numpy.argmax(logits, axis=-1).astype(jax.numpy.int32)
+            return new_state, metrics, t, c
+
+        return jax.jit(fn, donate_argnums=(0, 4))
+
+    return {k: fused(k) for k in k_buckets}
+
+
+def pick_bucket(tokens: float, microstep_tokens: float, buckets=(0, 1, 2, 4, 8)) -> int:
+    """Largest bucket affordable under the current Algorithm-1 token grant."""
+    affordable = int(tokens // max(microstep_tokens, 1e-9))
+    best = 0
+    for b in buckets:
+        if b <= affordable:
+            best = b
+    return best

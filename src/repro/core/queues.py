@@ -1,0 +1,86 @@
+"""Request queues + Poisson arrival generation (paper §5.1 methodology)."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SimRequest:
+    arrival_s: float
+    service_s: float  # execution time on an otherwise-idle device
+    request_id: int
+    online: bool
+    start_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+
+def poisson_arrivals(
+    *,
+    mean_interval_s: float,
+    num_requests: int,
+    service_s: float,
+    seed: int = 0,
+    online: bool = True,
+    start_s: float = 0.0,
+) -> list[SimRequest]:
+    """Exponential inter-arrival times (Poisson process), as in the paper:
+    'Poisson distribution is used for generating online inference workloads'
+    with a given mean across N total requests."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=mean_interval_s, size=num_requests)
+    t = start_s + np.cumsum(gaps)
+    return [
+        SimRequest(
+            arrival_s=float(t[i]),
+            service_s=service_s,
+            request_id=i,
+            online=online,
+        )
+        for i in range(num_requests)
+    ]
+
+
+class RequestQueue:
+    """FIFO with arrival-time gating (requests become visible at their
+    arrival timestamp)."""
+
+    def __init__(self, requests: list[SimRequest]):
+        self._pending = collections.deque(sorted(requests, key=lambda r: r.arrival_s))
+        self.completed: list[SimRequest] = []
+
+    def available(self, now_s: float) -> int:
+        return sum(1 for r in self._pending if r.arrival_s <= now_s)
+
+    def pull(self, now_s: float) -> Optional[SimRequest]:
+        if self._pending and self._pending[0].arrival_s <= now_s:
+            return self._pending.popleft()
+        return None
+
+    def done(self, req: SimRequest) -> None:
+        self.completed.append(req)
+
+    @property
+    def remaining(self) -> int:
+        return len(self._pending)
+
+    def p95_latency(self) -> float:
+        lats = [r.latency_s for r in self.completed if r.latency_s is not None]
+        if not lats:
+            return float("nan")
+        return float(np.percentile(lats, 95))
+
+    def mean_latency(self) -> float:
+        lats = [r.latency_s for r in self.completed if r.latency_s is not None]
+        if not lats:
+            return float("nan")
+        return float(np.mean(lats))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticDataset, make_train_iterator
+
+__all__ = ["SyntheticDataset", "make_train_iterator"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+The paper's contribution is scheduler-level (see ``repro.core``); these
+kernels cover the model compute hot spots it schedules around:
+  * flash_attention.py -- blocked online-softmax attention (MXU-tiled)
+  * ssm_scan.py        -- Mamba1 selective scan with VMEM-resident state
+ops.py dispatches between Pallas and XLA fallbacks; ref.py holds the
+pure-jnp oracles used by the test suite.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

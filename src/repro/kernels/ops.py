@@ -1,0 +1,75 @@
+"""Jit'd dispatch wrappers over the Pallas kernels with XLA fallbacks.
+
+``impl`` semantics:
+  * "auto"      -- pallas on TPU; on CPU/GPU pick xla (short seq) or
+                   xla_flash (long seq, no S^2 buffer)
+  * "xla"       -- plain einsum attention
+  * "xla_flash" -- lax.scan blocked online softmax
+  * "pallas"    -- Pallas kernel (interpret=True automatically off-TPU,
+                   so tests validate the real kernel body on CPU)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_FLASH_SEQ_THRESHOLD = 8192
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    impl: str = "auto",
+) -> jax.Array:
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, kvH, hd].  Returns [B, Sq, H, hd]."""
+    from repro.models import layers as L
+
+    if impl == "auto":
+        if _on_tpu():
+            impl = "pallas"
+        else:
+            impl = "xla_flash" if q.shape[1] >= _FLASH_SEQ_THRESHOLD else "xla"
+
+    if impl == "xla":
+        return L.attention_xla(q, k, v, causal=causal)
+    if impl == "xla_flash":
+        return L.attention_xla_flash(q, k, v, causal=causal)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        qh = q.shape[2]
+        kk = L._repeat_kv(k, qh)
+        vv = L._repeat_kv(v, qh)
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3),
+            kk.transpose(0, 2, 1, 3),
+            vv.transpose(0, 2, 1, 3),
+            causal=causal,
+            interpret=not _on_tpu(),
+        )
+        return out.transpose(0, 2, 1, 3)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def ssm_scan_chunk(xi, dt, B_, C_, A, h0):
+    """Pallas selective-scan chunk (interpret mode off-TPU)."""
+    from repro.kernels.ssm_scan import ssm_scan_chunk as _kernel
+
+    y, h = _kernel(
+        xi.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        B_.astype(jnp.float32),
+        C_.astype(jnp.float32),
+        A.astype(jnp.float32),
+        h0.astype(jnp.float32),
+        block_d=min(512, xi.shape[-1]),
+        interpret=not _on_tpu(),
+    )
+    return y, h

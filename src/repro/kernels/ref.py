@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, H, hd] (heads already expanded)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + (sk - sq))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)
+
+
+def ssm_scan_chunk_ref(
+    xi: jax.Array,
+    dt: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+    A: jax.Array,
+    h0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Naive sequential selective scan over one chunk.
+
+    xi/dt: [B, Q, di]; B_/C_: [B, Q, ds]; A: [di, ds]; h0: [B, di, ds].
+    h_t = exp(dt_t A) h_{t-1} + (dt_t xi_t) B_t ;  y_t = h_t . C_t
+    """
+    def step(h, inp):
+        xi_t, dt_t, b_t, c_t = inp  # [B, di], [B, di], [B, ds], [B, ds]
+        a = jnp.exp(dt_t[..., None] * A)  # [B, di, ds]
+        h = a * h + (dt_t * xi_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (xi.swapaxes(0, 1), dt.swapaxes(0, 1), B_.swapaxes(0, 1), C_.swapaxes(0, 1))
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), h_fin

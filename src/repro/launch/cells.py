@@ -1,0 +1,130 @@
+"""Per-cell runtime settings + builders for the (arch x shape) matrix.
+
+``microbatches`` per train cell is napkin-math'd so the remat'd activation
+footprint stays ~<= 3 GiB/chip at global_batch=256 over data=16 (see
+DESIGN.md §4); ``zero1``+``fsdp`` keep the fp32 state within v5e HBM for the
+33B/132B configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.runtime.step import (
+    ServeStepArtifacts,
+    TrainStepArtifacts,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+# arch id -> gradient-accumulation microbatches for train_4k
+TRAIN_MICROBATCHES = {
+    "zamba2-2.7b": 4,
+    "moonshot-v1-16b-a3b": 8,
+    "dbrx-132b": 16,
+    "deepseek-coder-33b": 16,
+    "qwen2-7b": 8,
+    "qwen3-1.7b": 4,
+    "olmo-1b": 4,
+    "falcon-mamba-7b": 16,
+    "musicgen-large": 8,
+    "pixtral-12b": 8,
+}
+
+
+def train_config_for(arch: str, **overrides: Any) -> TrainConfig:
+    base = dict(
+        microbatches=TRAIN_MICROBATCHES.get(arch, 8),
+        remat_policy="full",
+        zero1=True,
+        fsdp=True,
+        param_dtype="float32",
+        compute_dtype="bfloat16",
+    )
+    base.update(overrides)
+    return TrainConfig(**base)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    kind: str  # "train" | "prefill" | "decode"
+    artifacts: Any  # TrainStepArtifacts | ServeStepArtifacts
+
+    def lower(self):
+        """AOT-lower the cell's program against abstract inputs."""
+        if self.kind == "train":
+            art: TrainStepArtifacts = self.artifacts
+            return art.jitted(donate=True).lower(
+                art.abstract_state(), art.abstract_batch(self.shape)
+            )
+        art: ServeStepArtifacts = self.artifacts
+        return art.jitted().lower(*art.abstract_inputs())
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    train_overrides: dict | None = None,
+    options: dict | None = None,
+) -> Cell:
+    """``options`` select beyond-baseline variants (§Perf):
+    pad_heads      -- physical TP head padding for non-divisible GQA
+    cache_dtype    -- KV-cache storage dtype ("bfloat16" | "float8_e4m3fn")
+    layout         -- "tp" (default) | "dp256" (model axis joins data: pure
+                      DP+ZeRO-3; right call for small archs)
+    """
+    options = options or {}
+    if options.get("moe_dispatch"):
+        from repro.models import moe as MOE
+
+        MOE.set_dispatch(options["moe_dispatch"])
+    cfg = configs.get_config(arch)
+    shape = configs.get_shape(shape_name)
+    ok, reason = configs.shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {reason}")
+    if options.get("pad_heads"):
+        model = mesh.shape.get("model", 1)
+        cfg = cfg.padded_for_tp(model)
+    cache_dtype = jnp.dtype(options.get("cache_dtype", "bfloat16"))
+    if shape.kind == "train":
+        overrides = dict(train_overrides or {})
+        if options.get("layout"):
+            overrides["layout"] = options["layout"]
+            if options["layout"] == "dp256":
+                # B_local is 1 per device — grad accumulation is meaningless
+                overrides.setdefault("microbatches", 1)
+        tcfg = train_config_for(arch, **overrides)
+        art = make_train_step(cfg, tcfg, mesh, impl=options.get("impl", "auto"))
+        return Cell(arch, shape, cfg, "train", art)
+    if shape.kind == "prefill":
+        art = make_prefill_step(
+            cfg, mesh, shape, compute_dtype=jnp.bfloat16,
+            cache_dtype=cache_dtype,
+        )
+        return Cell(arch, shape, cfg, "prefill", art)
+    art = make_serve_step(
+        cfg, mesh, shape, compute_dtype=jnp.bfloat16, cache_dtype=cache_dtype,
+    )
+    return Cell(arch, shape, cfg, "decode", art)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs per step: 6*N_active*D for training, 2*N_active*D
+    for inference (D = tokens processed by the step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per slot

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-compile every (arch x shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the dry-run needs 512 placeholder
+host devices to build the 2x16x16 production mesh.  Smoke tests and benches
+import other modules and still see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --isolate
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import cells as C
+from repro.launch import hlo as H
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+
+DEFAULT_OUT = "results/dryrun"
+
+
+def cell_path(out_dir: str, mesh_name: str, arch: str, shape: str) -> str:
+    return os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    out_dir: str = DEFAULT_OUT,
+    save_hlo: bool = False,
+    train_overrides: dict | None = None,
+    options: dict | None = None,
+    tag: str = "",
+) -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    path = cell_path(out_dir, mesh_name, arch + tag, shape_name)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+
+    cfg = configs.get_config(arch)
+    shape = configs.get_shape(shape_name)
+    ok, reason = configs.shape_applicable(cfg, shape)
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    if not ok:
+        record["skipped"] = reason
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"[dryrun] SKIP {arch} x {shape_name} ({mesh_name}): {reason}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = 1
+    for v in mesh.shape.values():
+        n_devices *= v
+
+    t0 = time.time()
+    cell = C.build_cell(
+        arch, shape_name, mesh, train_overrides=train_overrides,
+        options=options,
+    )
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = H.memory_stats(compiled)
+    cost = H.cost_stats(compiled)
+    print(f"[dryrun] {arch} x {shape_name} ({mesh_name})")
+    print(f"  memory_analysis: {compiled.memory_analysis()}")
+    print(
+        "  cost_analysis (XLA, loop bodies once): flops=%.3e bytes=%.3e"
+        % (cost["flops"], cost["bytes_accessed"])
+    )
+
+    hlo_text = compiled.as_text()
+    parsed = hlo_cost.analyze(hlo_text)
+    print(
+        "  hlo_cost (trip-count rolled up): flops/device=%.3e bytes/device=%.3e"
+        % (parsed["flops"], parsed["bytes_accessed"])
+    )
+    roof = H.roofline_terms(
+        parsed=parsed,
+        n_devices=n_devices,
+        model_flops=C.model_flops(cfg, shape),
+    )
+    print(
+        f"  roofline: compute={roof.compute_s*1e3:.2f}ms"
+        f" memory={roof.memory_s*1e3:.2f}ms"
+        f" collective={roof.collective_s*1e3:.2f}ms"
+        f" -> dominant={roof.dominant}"
+        f" useful_flops_ratio={roof.useful_flops_ratio:.3f}"
+    )
+    for op, v in sorted(parsed["collectives"].items()):
+        print(
+            f"    {op:20s} n={v['count']:6.0f} result={v['result_bytes']/1e6:10.1f}MB"
+            f" wire={v['wire_bytes']/1e6:10.1f}MB groups={v['group_sizes']}"
+        )
+
+    record.update(
+        n_devices=n_devices,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem,
+        cost_xla=cost,
+        cost_parsed={k: parsed[k] for k in (
+            "flops", "bytes_accessed", "transcendentals",
+            "collective_result_bytes", "collective_wire_bytes")},
+        roofline=roof.as_dict(),
+        hbm_ok=bool(mem["peak_bytes_per_device"] <= 16 * 1024**3),
+        train_overrides=train_overrides or {},
+        options=options or {},
+    )
+    if save_hlo:
+        hlo_path = path.replace(".json", ".hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo_text)
+        record["hlo_path"] = hlo_path
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def _run_isolated(arch, shape, mesh_flag, out_dir, save_hlo) -> int:
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--mesh", mesh_flag,
+        "--out", out_dir,
+    ]
+    if save_hlo:
+        cmd.append("--save-hlo")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    res = subprocess.run(cmd, env=env)
+    return res.returncode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--isolate", action="store_true",
+                    help="run each cell in a subprocess (with --all)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--pad-heads", action="store_true",
+                    help="physical TP head padding (perf variant)")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=["bfloat16", "float8_e4m3fn"])
+    ap.add_argument("--layout", default=None, choices=["tp", "dp256"])
+    ap.add_argument("--impl", default=None, choices=["auto", "xla", "xla_flash"])
+    ap.add_argument("--moe-dispatch", default=None, choices=["batched", "vmap"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    options = {}
+    if args.pad_heads:
+        options["pad_heads"] = True
+    if args.cache_dtype:
+        options["cache_dtype"] = args.cache_dtype
+    if args.layout:
+        options["layout"] = args.layout
+    if args.impl:
+        options["impl"] = args.impl
+    if args.moe_dispatch:
+        options["moe_dispatch"] = args.moe_dispatch
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        failures = []
+        for arch, shape_name, ok, reason in configs.all_cells(include_skipped=True):
+            for multi_pod in meshes:
+                mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+                path = cell_path(args.out, mesh_name, arch, shape_name)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] exists, skipping {arch} x {shape_name} ({mesh_name})")
+                    continue
+                if args.isolate and ok:
+                    rc = _run_isolated(
+                        arch, shape_name,
+                        "multi" if multi_pod else "single",
+                        args.out, args.save_hlo,
+                    )
+                    if rc != 0:
+                        failures.append((arch, shape_name, mesh_name, f"rc={rc}"))
+                    continue
+                try:
+                    run_cell(
+                        arch, shape_name, multi_pod=multi_pod,
+                        out_dir=args.out, save_hlo=args.save_hlo,
+                    )
+                except Exception as e:  # record failures, keep going
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_name, repr(e)))
+        if failures:
+            print("\n[dryrun] FAILURES:")
+            for f in failures:
+                print("  ", f)
+            sys.exit(1)
+        print("\n[dryrun] all cells passed")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    for multi_pod in meshes:
+        run_cell(
+            args.arch, args.shape, multi_pod=multi_pod,
+            out_dir=args.out, save_hlo=args.save_hlo,
+            options=options or None, tag=args.tag,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Post-compile HLO analysis: collective byte counts + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs/bytes but no collective traffic,
+so we parse the optimized (SPMD-partitioned, per-device) HLO text and price
+every collective op with a ring model over its replica-group size:
+
+  all-reduce        2 * bytes * (g-1)/g        (reduce-scatter + all-gather)
+  all-gather        result * (g-1)/g           (each device sends its shard g-1 times)
+  reduce-scatter    result * (g-1)              (input = result*g; wire = input*(g-1)/g)
+  all-to-all        bytes * (g-1)/g
+  collective-permute  bytes                     (one hop)
+
+Terms (v5e constants fixed by the assignment):
+  compute    = device_flops / 197e12
+  memory     = device_bytes / 819e9
+  collective = device_wire_bytes / 50e9
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+# an instruction line:  %name = TYPE opcode(...)  /  name = (tuple) opcode(...)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*)$")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every TYPE[shape] token in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict  # opcode -> {"count", "result_bytes", "wire_bytes"}
+    total_result_bytes: int
+    total_wire_bytes: float
+    group_sizes: dict  # opcode -> sorted list of distinct group sizes
+
+    def summary(self) -> str:
+        rows = [
+            f"  {op:20s} n={v['count']:4d} result={v['result_bytes']/1e6:10.1f}MB"
+            f" wire={v['wire_bytes']/1e6:10.1f}MB groups={self.group_sizes[op]}"
+            for op, v in sorted(self.ops.items())
+        ]
+        return "\n".join(rows)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    ops: dict = {}
+    gsizes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        opcode = None
+        for cand in _COLLECTIVES:
+            # match 'opcode(' or async 'opcode-start('
+            if re.search(rf"\b{cand}(-start)?\(", rhs):
+                opcode = cand
+                break
+        if opcode is None or f"{opcode}-done" in rhs:
+            continue
+        # result segment = text before the opcode token
+        result_part = rhs.split(opcode)[0]
+        rbytes = _shape_bytes(result_part)
+        g = _group_size(rhs)
+        if opcode == "all-reduce":
+            wire = 2.0 * rbytes * (g - 1) / max(g, 1)
+        elif opcode == "all-gather":
+            wire = rbytes * (g - 1) / max(g, 1)
+        elif opcode == "reduce-scatter":
+            wire = float(rbytes) * (g - 1)
+        elif opcode in ("all-to-all", "ragged-all-to-all"):
+            wire = rbytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = float(rbytes)
+        rec = ops.setdefault(
+            opcode, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+        )
+        rec["count"] += 1
+        rec["result_bytes"] += rbytes
+        rec["wire_bytes"] += wire
+        gsizes.setdefault(opcode, set()).add(g)
+    return CollectiveStats(
+        ops=ops,
+        total_result_bytes=sum(v["result_bytes"] for v in ops.values()),
+        total_wire_bytes=sum(v["wire_bytes"] for v in ops.values()),
+        group_sizes={k: sorted(v) for k, v in gsizes.items()},
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    device_flops: float
+    device_bytes: float
+    collective_result_bytes: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_flops_ratio: float  # model_flops / (device_flops * n_devices)
+    bound_s: float  # max of the three terms = roofline-model step time
+    collectives: dict
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def roofline_terms(
+    *,
+    parsed: dict,
+    n_devices: int,
+    model_flops: float,
+) -> Roofline:
+    """``parsed`` is the output of ``hlo_cost.analyze`` (per-device totals
+    with loop trip counts applied)."""
+    device_flops = parsed["flops"]
+    device_bytes = parsed["bytes_accessed"]
+    wire = parsed["collective_wire_bytes"]
+    compute_s = device_flops / PEAK_FLOPS
+    memory_s = device_bytes / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    total_flops = device_flops * n_devices
+    return Roofline(
+        device_flops=device_flops,
+        device_bytes=device_bytes,
+        collective_result_bytes=parsed["collective_result_bytes"],
+        collective_wire_bytes=wire,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flops_ratio=model_flops / max(total_flops, 1e-30),
+        bound_s=max(terms.values()),
+        collectives=parsed["collectives"],
+    )
+
+
+def memory_stats(compiled) -> dict:
+    """Per-device memory picture from ``compiled.memory_analysis()``."""
+    m = compiled.memory_analysis()
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        out[k] = int(getattr(m, k, 0) or 0)
+    out["peak_bytes_per_device"] = (
+        out["argument_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        - out["alias_size_in_bytes"]
+    )
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    c = compiled.cost_analysis() or {}
+    return {
+        "flops": float(c.get("flops", 0.0)),
+        "bytes_accessed": float(c.get("bytes accessed", 0.0)),
+        "transcendentals": float(c.get("transcendentals", 0.0)),
+    }

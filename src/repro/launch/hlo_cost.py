@@ -1,0 +1,391 @@
+"""Call-graph-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` (HloCostAnalysis) counts every computation
+ONCE — a ``lax.scan`` over 62 layers reports 1/62nd of the real FLOPs, and
+collectives inside the loop are similarly undercounted.  This parser walks
+the partitioned module's call graph and multiplies ``while``-body costs by
+the loop trip count, giving per-device totals that are correct for
+scan-over-layers / scan-over-microbatch programs:
+
+  flops       -- dots (2*M*N*K via contracting dims), elementwise arithmetic,
+                 transcendentals, reduces
+  bytes       -- operands + result of every *top-level* op (fusion internals
+                 are register/VMEM-resident and free, matching the HBM
+                 traffic model)
+  collectives -- per-op result bytes + ring-model wire bytes, multiplied by
+                 enclosing trip counts
+
+Trip counts are recovered from the loop condition's ``compare(iter,
+constant(N))`` pattern (all our loops come from lax.scan, which emits it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "maximum",
+    "minimum", "compare", "select", "and", "or", "xor", "not",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "clamp", "power",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "sine", "cosine", "tan", "atan2", "logistic",
+    "erf", "expm1", "log1p",
+}
+_COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_info(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dtype, shape))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dtype, shape in _shape_info(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of(text: str) -> int:
+    total = 0
+    for _, shape in _shape_info(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str  # result type text
+    opcode: str
+    rest: str  # everything after the opening paren (operands + attrs)
+    is_root: bool = False
+
+    def operand_names(self) -> list[str]:
+        # operands live before the closing paren of the op; attrs follow.
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return _OPERAND_RE.findall(self.rest[:i])
+        return _OPERAND_RE.findall(self.rest)
+
+    def attr_comp(self, key: str) -> Optional[str]:
+        m = _ATTR_COMP_RE[key].search(self.rest)
+        return m.group(1) if m else None
+
+    def group_size(self) -> int:
+        m = _GROUPS_IOTA_RE.search(self.rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(self.rest)
+        if m:
+            ids = [x for x in m.group(1).split(",") if x.strip()]
+            return max(1, len(ids))
+        return 1
+
+
+def parse_computations(hlo_text: str) -> tuple[dict, str]:
+    """-> ({comp_name: [Instr, ...]}, entry_name)"""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if hdr and not line.lstrip().startswith("%param"):
+            current = hdr.group(1)
+            comps[current] = []
+            if line.strip().startswith("ENTRY"):
+                entry = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, result, opcode, rest = m.groups()
+            comps[current].append(
+                Instr(name, result, opcode, rest,
+                      is_root=line.lstrip().startswith("ROOT"))
+            )
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    return comps, entry
+
+
+def _trip_count(cond_instrs: list[Instr]) -> int:
+    """lax.scan loop conditions compare the counter against constant(N)."""
+    consts = {}
+    for ins in cond_instrs:
+        m = _CONST_RE.search(ins.opcode + "(" + ins.rest)
+        if ins.opcode == "constant":
+            mm = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if mm:
+                consts[ins.name] = int(mm.group(1))
+    for ins in cond_instrs:
+        if ins.opcode == "compare":
+            for op in ins.operand_names():
+                if op in consts:
+                    return consts[op]
+    return max(consts.values(), default=1)
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_result_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_ops: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CompCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        self.coll_result_bytes += other.coll_result_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        for k, v in other.coll_ops.items():
+            rec = self.coll_ops.setdefault(
+                k, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0,
+                    "group_sizes": set()}
+            )
+            rec["count"] += v["count"] * mult
+            rec["result_bytes"] += v["result_bytes"] * mult
+            rec["wire_bytes"] += v["wire_bytes"] * mult
+            rec["group_sizes"] |= set(v["group_sizes"])
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_computations(hlo_text)
+        self._defs: dict[str, dict[str, str]] = {
+            c: {i.name: i.result for i in instrs}
+            for c, instrs in self.comps.items()
+        }
+        self._flops_cache: dict[tuple[str, bool], CompCost] = {}
+
+    # -- per-instruction flops -------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = _elems_of(ins.result)
+        ops = ins.operand_names()
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        if m and ops:
+            lhs_shape_txt = self._defs[comp].get(ops[0], "")
+            shapes = _shape_info(lhs_shape_txt)
+            if shapes:
+                lhs = shapes[0][1]
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs):
+                        k *= lhs[int(idx)]
+        return 2.0 * out_elems * k
+
+    def _instr_flops(self, comp: str, ins: Instr) -> tuple[float, float]:
+        """-> (flops, transcendentals)"""
+        if ins.opcode == "dot":
+            return self._dot_flops(comp, ins), 0.0
+        if ins.opcode == "convolution":
+            return self._dot_flops(comp, ins), 0.0  # contracting-dim model
+        if ins.opcode in _ELEMENTWISE_1FLOP:
+            return float(_elems_of(ins.result)), 0.0
+        if ins.opcode in _TRANSCENDENTAL:
+            n = float(_elems_of(ins.result))
+            return n, n
+        if ins.opcode == "reduce":
+            # cost ~ number of input elements
+            ops = ins.operand_names()
+            if ops:
+                return float(_elems_of(self._defs[comp].get(ops[0], ""))), 0.0
+            return float(_elems_of(ins.result)), 0.0
+        return 0.0, 0.0
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        total = 0
+        for op in ins.operand_names():
+            total += _bytes_of(self._defs[comp].get(op, ""))
+        return total
+
+    def _root_opcode(self, comp: str) -> str:
+        for ins in self.comps.get(comp, []):
+            if ins.is_root:
+                return ins.opcode
+        instrs = self.comps.get(comp, [])
+        return instrs[-1].opcode if instrs else ""
+
+    def _instr_bytes(self, comp: str, ins: Instr) -> float:
+        """HBM traffic model for one top-level op.
+
+        Slice-type ops move only the slice, not the buffer they index into
+        (dynamic-slice / gather read O(result); dynamic-update-slice writes
+        O(update) in place — the enclosing buffer must not be charged per
+        loop iteration, which would overcount a scan's weight/stash buffers
+        by the trip count)."""
+        op = ins.opcode
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * _bytes_of(ins.result)
+        if op == "dynamic-update-slice":
+            ops = ins.operand_names()
+            upd = (
+                _bytes_of(self._defs[comp].get(ops[1], "")) if len(ops) > 1 else 0
+            )
+            return 2.0 * upd
+        if op in ("scatter", "select-and-scatter"):
+            return 3.0 * _bytes_of(ins.result)
+        if op == "fusion":
+            callee = ins.attr_comp("calls")
+            root = self._root_opcode(callee) if callee else ""
+            rbytes = _bytes_of(ins.result)
+            if root in ("dynamic-update-slice", "dynamic-slice", "scatter"):
+                # charge only operands strictly smaller than the aliased
+                # big buffer, twice (read + write of the touched region)
+                small = 0
+                for opn in ins.operand_names():
+                    b = _bytes_of(self._defs[comp].get(opn, ""))
+                    if b < rbytes:
+                        small += b
+                return 2.0 * small
+            return rbytes + self._operand_bytes(comp, ins)
+        return _bytes_of(ins.result) + self._operand_bytes(comp, ins)
+
+    # -- computation rollup ------------------------------------------------
+    def comp_cost(self, comp: str, fused: bool = False) -> CompCost:
+        key = (comp, fused)
+        if key in self._flops_cache:
+            return self._flops_cache[key]
+        cost = CompCost()
+        self._flops_cache[key] = cost  # guard recursion
+        for ins in self.comps.get(comp, []):
+            fl, tr = self._instr_flops(comp, ins)
+            cost.flops += fl
+            cost.transcendentals += tr
+            if ins.opcode == "while":
+                body = ins.attr_comp("body")
+                cond = ins.attr_comp("condition")
+                trip = _trip_count(self.comps.get(cond, [])) if cond else 1
+                if body:
+                    cost.add(self.comp_cost(body), mult=trip)
+                if cond:
+                    cost.add(self.comp_cost(cond), mult=trip)
+                continue
+            if ins.opcode == "fusion":
+                callee = ins.attr_comp("calls")
+                if callee:
+                    sub = self.comp_cost(callee, fused=True)
+                    cost.flops += sub.flops
+                    cost.transcendentals += sub.transcendentals
+                    # fusion internals don't touch HBM
+                if not fused:
+                    cost.bytes += self._instr_bytes(comp, ins)
+                continue
+            if ins.opcode in ("call", "conditional", "map"):
+                for k in ("to_apply", "calls"):
+                    callee = ins.attr_comp(k)
+                    if callee:
+                        cost.add(self.comp_cost(callee, fused=fused))
+                continue
+            base = ins.opcode.removesuffix("-start")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "ragged-all-to-all", "collective-permute"):
+                rbytes = _bytes_of(ins.result)
+                # async -start results carry (input, output) tuples; price
+                # the op once via its largest array
+                g = ins.group_size()
+                if base == "all-reduce":
+                    wire = 2.0 * rbytes * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    wire = rbytes * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    wire = float(rbytes) * (g - 1)
+                elif base in ("all-to-all", "ragged-all-to-all"):
+                    wire = rbytes * (g - 1) / max(g, 1)
+                else:
+                    wire = float(rbytes)
+                cost.coll_result_bytes += rbytes
+                cost.coll_wire_bytes += wire
+                rec = cost.coll_ops.setdefault(
+                    base, {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0,
+                           "group_sizes": set()}
+                )
+                rec["count"] += 1
+                rec["result_bytes"] += rbytes
+                rec["wire_bytes"] += wire
+                rec["group_sizes"].add(g)
+            if not fused and ins.opcode not in (
+                "parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast",
+            ):
+                cost.bytes += self._instr_bytes(comp, ins)
+        return cost
+
+    def total(self) -> CompCost:
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCostModel(hlo_text).total()
+    return {
+        "flops": cost.flops,
+        "bytes_accessed": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "collective_result_bytes": cost.coll_result_bytes,
+        "collective_wire_bytes": cost.coll_wire_bytes,
+        "collectives": {
+            k: {
+                "count": v["count"],
+                "result_bytes": v["result_bytes"],
+                "wire_bytes": v["wire_bytes"],
+                "group_sizes": sorted(v["group_sizes"]),
+            }
+            for k, v in cost.coll_ops.items()
+        },
+    }

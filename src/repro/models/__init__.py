@@ -1,0 +1,18 @@
+"""Model zoo: decoder LMs for all assigned families."""
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "lm_loss",
+    "init_cache",
+    "decode_step",
+    "prefill",
+]

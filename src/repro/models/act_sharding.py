@@ -1,0 +1,48 @@
+"""Activation-sharding constraints at block boundaries (MaxText-style).
+
+Model code is mesh-agnostic; the step builders activate a context with the
+resolved activation specs, and ``shard(x, kind)`` becomes a
+``with_sharding_constraint`` only while a context is live (tests / CPU
+smoke paths are unaffected).
+
+Why this exists (observed on the dry-run HLO): without activation anchors
+GSPMD resolves the (FSDP x TP) weight shardings by *partial contraction* —
+per-layer all-reduces of activation-sized tensors over the fsdp axis, and
+attention replicated over ``model``.  Anchoring activations (batch on
+``data``/``pod``, heads/ffn/vocab on ``model``) makes it pick the intended
+program: per-layer weight all-gather (ZeRO-3) + Megatron-style block
+collectives.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_ACTIVE: Optional[tuple] = None  # (mesh, {kind: PartitionSpec})
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, specs: dict):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = (mesh, specs)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain ``x`` to the active context's spec for ``kind`` (no-op
+    outside a context or for unknown kinds)."""
+    if _ACTIVE is None:
+        return x
+    mesh, specs = _ACTIVE
+    spec = specs.get(kind)
+    if spec is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,164 @@
+"""Top-k Mixture-of-Experts block (GShard/Switch-style, capacity-bounded).
+
+Dispatch uses scatter/gather with GShard priority positioning instead of the
+classic ``[s, e, c]`` one-hot einsum, so the only O(tokens * capacity) buffer
+is the real expert activation ``[E, C, d]`` — this keeps the memory roofline
+term honest at 1M-token global batches.
+
+Sharding: tokens (group dim) ride the ``data`` axis, experts ride ``model``
+(expert parallelism).  The scatter into the expert-sharded buffer is what
+GSPMD turns into the dispatch all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.act_sharding import shard
+
+
+_DISPATCH = "vmap"  # "batched" | "vmap" (perf-experiment switch; see
+# EXPERIMENTS.md §Perf — "batched" shards expert compute 4.8x better on
+# moonshot but explodes dispatch collectives on dbrx's wider capacity)
+
+
+def set_dispatch(mode: str) -> None:
+    global _DISPATCH
+    assert mode in ("batched", "vmap")
+    globals()["_DISPATCH"] = mode
+
+
+def init_moe(cfg: ModelConfig, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d**-0.5,
+        "wg": jax.random.normal(ks[1], (e, d, f), dtype) * d**-0.5,
+        "wu": jax.random.normal(ks[2], (e, d, f), dtype) * d**-0.5,
+        "wd": jax.random.normal(ks[3], (e, f, d), dtype) * f**-0.5,
+    }
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    cap = tokens_per_group * cfg.experts_per_token * cfg.moe_capacity_factor
+    cap = int(cap / cfg.num_experts) + 1
+    return max(8, ((cap + 7) // 8) * 8)  # multiple of 8 for TPU-friendly layout
+
+
+def _route_one_group(x, p, cfg: ModelConfig, capacity: int):
+    """x: [s, d] one token group. Returns (y [s, d], aux metrics)."""
+    s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("sd,de->se", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)  # [s, k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # GShard priority: all 1st choices rank before any 2nd choice, etc.
+    ids_t = ids.T.reshape(-1)  # [k*s], k-major
+    onehot = jax.nn.one_hot(ids_t, e, dtype=jnp.int32)  # [k*s, e]
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # position within expert
+    pos_of = jnp.sum(onehot * pos, axis=-1)  # [k*s]
+    keep = pos_of < capacity
+    dest = ids_t * capacity + jnp.minimum(pos_of, capacity - 1)
+
+    xr = jnp.tile(x, (k, 1))  # [k*s, d]
+    contrib = jnp.where(keep[:, None], xr, 0)
+    buf = jnp.zeros((e * capacity, d), x.dtype).at[dest].add(contrib)
+    buf = buf.reshape(e, capacity, d)
+    # NOTE: no with_sharding_constraint here — under vmap a constraint pins
+    # the mapped (batch) dim replicated, which costs TBs of dispatch
+    # collectives (measured; see EXPERIMENTS.md §Perf moonshot log).
+
+    # per-expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(e * capacity, d)
+
+    wt = weights.T.reshape(-1)  # [k*s] aligned with ids_t
+    y_r = out[dest] * (wt * keep).astype(x.dtype)[:, None]
+    y = y_r.reshape(k, s, d).sum(axis=0)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jax.nn.one_hot(ids[:, 0], e).mean(axis=0)  # top-1 dispatch fraction
+    aux = e * jnp.sum(me * ce)
+    dropped = 1.0 - keep.mean()
+    return y, (aux, dropped)
+
+
+def moe_block(cfg: ModelConfig, p, x: jax.Array):
+    """x: [B, S, d] -> (y, aux_loss, drop_fraction).
+
+    Train/prefill: each batch row is a routing group (its tokens share
+    expert capacity), so group count rides the data axis and routing is
+    shard-local.  The dispatch is written as ONE batched scatter into a
+    ``[B, E, C, d]`` buffer (no vmap): a with_sharding_constraint inside
+    vmap pins the mapped dim replicated, which turned the dispatch into
+    per-layer buffer-sized all-reduces over ``data`` (measured 2.3 TB/step
+    wire on moonshot train — see EXPERIMENTS.md §Perf).
+
+    Decode (S == 1): the whole batch forms ONE routing group.  Per-row
+    groups would hold ``max(8, ...)`` capacity slots per expert for a
+    single token — at B=128, E=64 that computes ~85x more expert-FLOPs
+    than routed (measured useful ratio 0.001 on the dry-run) and OOMs the
+    decode cells.  Batch-grouping drops capacity to ``B*k*cf/E``.
+    """
+    b, s, d = x.shape
+    if s == 1 and b > 1:
+        capacity = expert_capacity(cfg, b)
+        y, (aux, dropped) = _route_one_group(x[:, 0, :], p, cfg, capacity)
+        return shard(y[:, None, :], "btd"), aux, dropped
+
+    if _DISPATCH == "vmap":
+        capacity = expert_capacity(cfg, s)
+        y, (aux, dropped) = jax.vmap(
+            lambda xg: _route_one_group(xg, p, cfg, capacity)
+        )(x)
+        return shard(y, "btd"), aux.mean(), dropped.mean()
+
+    e, k = cfg.num_experts, cfg.experts_per_token
+    capacity = expert_capacity(cfg, s)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)  # [b, s, k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # GShard priority, k-major within each group (batch row)
+    ids_t = ids.transpose(0, 2, 1).reshape(b, k * s)  # [b, k*s]
+    onehot = jax.nn.one_hot(ids_t, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_of = jnp.sum(onehot * pos, axis=-1)  # [b, k*s]
+    keep = pos_of < capacity
+    dest = ids_t * capacity + jnp.minimum(pos_of, capacity - 1)
+
+    xr = jnp.tile(x, (1, k, 1))  # [b, k*s, d], k-major
+    contrib = jnp.where(keep[..., None], xr, 0)
+    # batch-dim scatter: the leading coordinate keeps the op visibly
+    # batch-parallel so the group dim stays on ``data`` (a flattened
+    # [b*e*cap] scatter hides that and GSPMD falls back to replication)
+    bidx = jnp.arange(b)[:, None]
+    buf = (
+        jnp.zeros((b, e * capacity, d), x.dtype).at[bidx, dest].add(contrib)
+    )
+    buf = shard(buf.reshape(b, e, capacity, d), "becd")
+
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    u = jnp.einsum("becd,edf->becf", buf, p["wu"])
+    h = jax.nn.silu(g) * u
+    out = shard(jnp.einsum("becf,efd->becd", h, p["wd"]), "becd")
+
+    wt = weights.transpose(0, 2, 1).reshape(b, k * s)  # aligned with ids_t
+    y_r = jnp.take_along_axis(
+        out.reshape(b, e * capacity, d), dest[..., None], axis=1
+    )
+    y_r = y_r * (wt * keep).astype(x.dtype)[..., None]
+    y = y_r.reshape(b, k, s, d).sum(axis=1)
+
+    me = probs.mean(axis=1)  # [b, e]
+    ce = jax.nn.one_hot(ids[:, :, 0], e).mean(axis=1)
+    aux = (e * jnp.sum(me * ce, axis=-1)).mean()
+    dropped = 1.0 - keep.mean()
+    return shard(y, "btd"), aux, dropped

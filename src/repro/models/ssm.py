@@ -1,0 +1,351 @@
+"""Mamba1 / Mamba2 state-space blocks.
+
+TPU-native adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes
+  * train/prefill: a *chunked* scan — ``lax.scan`` over sequence chunks with an
+    ``associative_scan`` (Mamba1) or SSD matmul form (Mamba2) inside each
+    chunk, so the O(S * d_inner * d_state) state tensor is never materialized
+    beyond one chunk.  The Pallas kernel in ``kernels/ssm_scan.py`` fuses the
+    Mamba1 inner chunk for TPU VMEM.
+  * decode: a single recurrence step over carried (conv window, ssm state).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.act_sharding import shard
+
+Params = Any
+DEFAULT_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    """x: [B, S, C]; w: [K, C] depthwise kernel; left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # gather K shifted views: sum_j x[t-K+1+j] * w[j]
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for j in range(k):  # K is 4 — unrolled python loop is fine
+        out = out + xp[:, j : j + s, :] * w[j]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def causal_conv_step(
+    x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  x_t: [B, C]; conv_state: [B, K-1, C] (past inputs)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(cfg: ModelConfig, key, dtype) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, k = cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * d**-0.5,
+        "conv_w": jax.random.normal(ks[1], (k, di), dtype) * k**-0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * ds), dtype) * di**-0.5,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * dtr**-0.5,
+        "dt_bias": jnp.full((di,), -2.0, dtype),  # softplus(-2) ~ small init dt
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * di**-0.5,
+    }
+
+
+def _scan_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan_chunked(
+    xi: jax.Array,
+    dt: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+    A: jax.Array,
+    h0: jax.Array,
+    chunk: int = DEFAULT_CHUNK,
+    impl: str = "xla",
+) -> tuple[jax.Array, jax.Array]:
+    """Selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = h_t . C_t.
+
+    xi/dt: [B, S, di]; B_/C_: [B, S, ds]; A: [di, ds]; h0: [B, di, ds].
+    Returns (y [B, S, di], h_final).  Memory bound by one chunk's
+    [B, chunk, di, ds] state tensor.
+    """
+    from repro.kernels import ops  # local import avoids cycles
+
+    b, s, di = xi.shape
+    ds = B_.shape[-1]
+    nchunks = max(1, (s + chunk - 1) // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+
+    def ref_chunk(xi_c, dt_c, B_c, C_c, h):
+        # a: [B, Q, di, ds] decay; bb: input contribution
+        a = jnp.exp(dt_c[..., None] * A)
+        bb = (dt_c * xi_c)[..., None] * B_c[:, :, None, :]
+        aa, bbs = jax.lax.associative_scan(_scan_combine, (a, bb), axis=1)
+        hs = aa * h[:, None] + bbs  # [B, Q, di, ds]
+        y = jnp.einsum("bqdn,bqn->bqd", hs, C_c)
+        return y, hs[:, -1]
+
+    def body(h, inputs):
+        xi_c, dt_c, B_c, C_c = inputs
+        if impl == "pallas":
+            y, h_new = ops.ssm_scan_chunk(xi_c, dt_c, B_c, C_c, A, h)
+        else:
+            y, h_new = ref_chunk(xi_c, dt_c, B_c, C_c, h)
+        return h_new, y
+
+    reshape = lambda t: t.reshape(b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(
+        body, h0, (reshape(xi), reshape(dt), reshape(B_), reshape(C_))
+    )
+    y = ys.swapaxes(0, 1).reshape(b, nchunks * chunk, di)
+    return y[:, :s], h_fin
+
+
+def mamba1_block(
+    cfg: ModelConfig, p: Params, x: jax.Array, impl: str = "xla"
+) -> jax.Array:
+    """Full-sequence Mamba1 block. x: [B, S, d]."""
+    b, s, _ = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    xz = shard(jnp.einsum("bsd,de->bse", x, p["in_proj"]), "bti")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi)
+    dbc = jnp.einsum("bse,ef->bsf", xi, p["x_proj"])
+    dt_r, B_, C_ = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    y, _ = selective_scan_chunked(
+        xi.astype(jnp.float32), dt, B_.astype(jnp.float32), C_.astype(jnp.float32),
+        A, h0, impl=impl,
+    )
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * xi
+    y = shard(y * jax.nn.silu(z), "bti")
+    return shard(jnp.einsum("bse,ed->bsd", y, p["out_proj"]), "btd")
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba1_step(
+    cfg: ModelConfig, p: Params, x_t: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """One decode step. x_t: [B, d]."""
+    ds, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = causal_conv_step(xi, state["conv"], p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi)
+    dbc = jnp.einsum("be,ef->bf", xi, p["x_proj"])
+    dt_r, B_, C_ = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)  # [B, di, ds]
+    h = a * state["h"] + (dt * xi.astype(jnp.float32))[..., None] * B_.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_.astype(jnp.float32)).astype(x_t.dtype)
+    y = y + p["D"].astype(x_t.dtype) * xi
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("be,ed->bd", y, p["out_proj"]), {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2) — SSD chunked matmul form
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype) -> Params:
+    """Projections are kept *unpacked* (z/x vs B/C/dt, conv_x vs conv_bc) so
+    tensor-parallel sharding boundaries fall on whole weights instead of
+    inside a packed dim (which would force GSPMD reshards)."""
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, k = cfg.ssm_num_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj_zx": jax.random.normal(ks[0], (d, 2 * di), dtype) * d**-0.5,
+        "in_proj_bcdt": jax.random.normal(ks[1], (d, 2 * ds + nh), dtype) * d**-0.5,
+        "conv_x_w": jax.random.normal(ks[2], (k, di), dtype) * k**-0.5,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": jax.random.normal(ks[3], (k, 2 * ds), dtype) * k**-0.5,
+        "conv_bc_b": jnp.zeros((2 * ds,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[0], (di, d), dtype) * di**-0.5,
+    }
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """logd: [..., Q] -> [..., Q, Q] lower-triangular cumulative log decay:
+    out[i, j] = sum_{t=j+1..i} logd[t], -inf above diagonal."""
+    q = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [.., i, j] = sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+    A: jax.Array,
+    h0: jax.Array,
+    chunk: int = DEFAULT_CHUNK,
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD.  x: [B, S, nh, hp]; dt: [B, S, nh]; B_/C_: [B, S, ds];
+    A: [nh] (negative); h0: [B, nh, hp, ds].  Returns (y, h_final)."""
+    b, s, nh, hp = x.shape
+    ds = B_.shape[-1]
+    nchunks = max(1, (s + chunk - 1) // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+
+    def body(h, inputs):
+        x_c, dt_c, B_c, C_c = inputs  # [B,Q,nh,hp], [B,Q,nh], [B,Q,ds]
+        logd = dt_c * A  # [B, Q, nh] log decay per step
+        L = jnp.exp(_segsum(jnp.moveaxis(logd, -1, 1)))  # [B, nh, Q, Q]
+        # intra-chunk: scores[q, p] = C_q . B_p, weighted by decay and dt_p
+        scores = jnp.einsum("bqn,bpn->bqp", C_c, B_c)  # [B, Q, Q]
+        M = L * scores[:, None] * jnp.moveaxis(dt_c, -1, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhqp,bphx->bqhx", M, x_c)
+        # inter-chunk: contribution of carried state
+        cum = jnp.cumsum(logd, axis=1)  # [B, Q, nh]
+        decay_in = jnp.exp(cum)  # decay from chunk start to step q
+        y_inter = jnp.einsum("bqn,bnxs,bqs->bqnx", decay_in, h, C_c)
+        # state update: h' = exp(cum[-1]) h + sum_p exp(cum[-1]-cum[p]) dt_p x_p B_p
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)  # [B, Q, nh]
+        dx = (dt_c * decay_out)[..., None] * x_c  # [B, Q, nh, hp]
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bqnx,bqs->bnxs", dx, B_c
+        )
+        return h_new, y_intra + y_inter
+
+    reshape = lambda t: t.reshape(b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(
+        body, h0, (reshape(x), reshape(dt), reshape(B_), reshape(C_))
+    )
+    y = ys.swapaxes(0, 1).reshape(b, nchunks * chunk, nh, hp)
+    return y[:, :s], h_fin
+
+
+def mamba2_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 block.  x: [B, S, d]."""
+    from repro.models.layers import rms_norm
+
+    b, s, _ = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    zx = shard(jnp.einsum("bsd,de->bse", x, p["in_proj_zx"]), "bti")
+    z, xr = jnp.split(zx, 2, axis=-1)
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
+    bc, dt = jnp.split(bcdt, [2 * ds], axis=-1)
+    xi = jax.nn.silu(causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
+    bc = jax.nn.silu(causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"]))
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, s, nh, hp).astype(jnp.float32)
+    h0 = jnp.zeros((b, nh, hp, ds), jnp.float32)
+    y, _ = ssd_chunked(xh, dt, B_.astype(jnp.float32), C_.astype(jnp.float32), A, h0)
+    y = y + p["D"][:, None] * xh
+    y = shard(y.reshape(b, s, di).astype(x.dtype), "bti")
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])  # gated RMSNorm (Mamba2)
+    return shard(jnp.einsum("bse,ed->bsd", y, p["out_proj"]), "btd")
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state), dtype),
+        "h": jnp.zeros(
+            (batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def mamba2_step(
+    cfg: ModelConfig, p: Params, x_t: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """One decode step.  x_t: [B, d]."""
+    from repro.models.layers import rms_norm
+
+    b = x_t.shape[0]
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    zx = jnp.einsum("bd,de->be", x_t, p["in_proj_zx"])
+    z, xr = jnp.split(zx, 2, axis=-1)
+    bcdt = jnp.einsum("bd,de->be", x_t, p["in_proj_bcdt"])
+    bc, dt = jnp.split(bcdt, [2 * ds], axis=-1)
+    xi, conv_x = causal_conv_step(xr, state["conv_x"], p["conv_x_w"], p["conv_x_b"])
+    xi = jax.nn.silu(xi)
+    bc, conv_bc = causal_conv_step(
+        bc, state["conv_bc"], p["conv_bc_w"], p["conv_bc_b"]
+    )
+    bc = jax.nn.silu(bc)
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # [B, nh]
+    xh = xi.reshape(b, nh, hp).astype(jnp.float32)
+    h = a[..., None, None] * state["h"] + (dt[..., None] * xh)[..., None] * B_.astype(
+        jnp.float32
+    )[:, None, None, :]
+    y = jnp.einsum("bnxs,bs->bnx", h, C_.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(b, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return jnp.einsum("be,ed->bd", y, p["out_proj"]), {
+        "conv_x": conv_x,
+        "conv_bc": conv_bc,
+        "h": h,
+    }

@@ -1,0 +1,517 @@
+"""Decoder-only LM supporting all assigned families.
+
+One parameter pytree, ``lax.scan`` over stacked layer weights (keeps HLO and
+compile time depth-independent), three entry points:
+
+  * ``forward``      -- train / full-sequence logits (tokens or embeddings in)
+  * ``prefill``      -- forward + build decode cache
+  * ``decode_step``  -- one token with KV cache / SSM state
+
+Hybrid (Zamba2) runs an outer scan over cycles: one *shared* attention+MLP
+block (single weight set) followed by ``shared_attn_every`` Mamba2 layers per
+cycle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.act_sharding import shard
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        p["attn"] = L.init_attention(cfg, ks[0], cfg.d_model, dtype)
+        if cfg.family == "moe":
+            p["ffn"] = MOE.init_moe(cfg, ks[1], dtype)
+        else:
+            p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.parametric_norm:
+            p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+            p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    elif cfg.family == "ssm":
+        p["mixer"] = SSM.init_mamba1(cfg, ks[0], dtype)
+        if cfg.parametric_norm:
+            p["ln"] = jnp.ones((cfg.d_model,), dtype)
+    elif cfg.family == "hybrid":
+        p["mixer"] = SSM.init_mamba2(cfg, ks[0], dtype)
+        if cfg.parametric_norm:
+            p["ln"] = jnp.ones((cfg.d_model,), dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dtype)
+        * cfg.d_model**-0.5
+    }
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_init_layer(cfg, keys[1 + i], dtype) for i in range(cfg.num_layers)],
+    )
+    if cfg.family == "hybrid":
+        n_cyc = cfg.num_layers // cfg.shared_attn_every
+        stacked = jax.tree.map(
+            lambda x: x.reshape(n_cyc, cfg.shared_attn_every, *x.shape[1:]), stacked
+        )
+        kk = jax.random.split(keys[-1], 2)
+        params["shared"] = {
+            "attn": L.init_attention(cfg, kk[0], cfg.d_model, dtype),
+            "ffn": L.init_mlp(kk[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+        if cfg.parametric_norm:
+            params["shared"]["ln1"] = jnp.ones((cfg.d_model,), dtype)
+            params["shared"]["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    params["layers"] = stacked
+    if cfg.parametric_norm:
+        params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size), dtype)
+            * cfg.d_model**-0.5
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer(cfg: ModelConfig, p: Params, x: jax.Array, impl: str):
+    h = L.norm(cfg, x, p.get("ln1"))
+    x = x + L.attention_block(cfg, p["attn"], h, impl=impl)
+    h = L.norm(cfg, x, p.get("ln2"))
+    if cfg.family == "moe":
+        y, aux, dropped = MOE.moe_block(cfg, p["ffn"], h)
+        return x + y, aux, dropped
+    return x + L.mlp_block(p["ffn"], h), jnp.float32(0), jnp.float32(0)
+
+
+def _ssm_layer(cfg: ModelConfig, p: Params, x: jax.Array, impl: str):
+    h = L.norm(cfg, x, p.get("ln"))
+    if cfg.family == "hybrid":
+        return x + SSM.mamba2_block(cfg, p["mixer"], h)
+    return x + SSM.mamba1_block(cfg, p["mixer"], h, impl=impl)
+
+
+def _shared_block(cfg: ModelConfig, p: Params, x: jax.Array, impl: str):
+    h = L.norm(cfg, x, p.get("ln1"))
+    x = x + L.attention_block(cfg, p["attn"], h, impl=impl)
+    h = L.norm(cfg, x, p.get("ln2"))
+    return x + L.mlp_block(p["ffn"], h)
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / logits over full sequence)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array, dtype):
+    return params["embed"].astype(dtype)[tokens]
+
+
+def unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    *,
+    impl: str = "xla",
+    remat_policy: str = "none",
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """inputs: int tokens [B, S] or (embed_inputs archs) embeddings [B, S, d].
+    Returns (logits [B, S, V], metrics)."""
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = embed_tokens(cfg, params, inputs, compute_dtype)
+    else:
+        assert cfg.embed_inputs, f"{cfg.name} does not take embedding inputs"
+        x = inputs.astype(compute_dtype)
+    x = shard(x, "btd")
+
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1 else a, t)
+
+    if cfg.family == "hybrid":
+        shared = cast(params["shared"])
+
+        def cycle(xc, cyc_params):
+            xc = _shared_block(cfg, shared, xc, impl)
+
+            def inner(xi, lp):
+                return shard(_ssm_layer(cfg, lp, xi, impl), "btd"), None
+
+            xc, _ = jax.lax.scan(inner, xc, cyc_params)
+            return xc, None
+
+        body = _maybe_remat(cycle, remat_policy)
+        x, _ = jax.lax.scan(body, x, cast(params["layers"]))
+        aux = dropped = jnp.float32(0)
+    elif cfg.family == "ssm":
+
+        def body(xc, lp):
+            return shard(_ssm_layer(cfg, lp, xc, impl), "btd"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat_policy), x, cast(params["layers"]))
+        aux = dropped = jnp.float32(0)
+    else:
+
+        def body(xc, lp):
+            xc, a, dr = _dense_layer(cfg, lp, xc, impl)
+            return shard(xc, "btd"), (a, dr)
+
+        x, (auxs, drops) = jax.lax.scan(
+            _maybe_remat(body, remat_policy), x, cast(params["layers"])
+        )
+        aux, dropped = auxs.mean(), drops.mean()
+
+    x = L.norm(cfg, x, params.get("final_norm"))
+    logits = shard(unembed(cfg, params, x), "btv")
+    return logits, {"moe_aux": aux, "moe_dropped": dropped}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    labels: jax.Array,
+    *,
+    impl: str = "xla",
+    remat_policy: str = "none",
+    compute_dtype=jnp.bfloat16,
+    moe_aux_weight: float = 0.01,
+) -> tuple[jax.Array, dict]:
+    logits, metrics = forward(
+        cfg, params, inputs, impl=impl, remat_policy=remat_policy,
+        compute_dtype=compute_dtype,
+    )
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    loss = ce + moe_aux_weight * metrics["moe_aux"]
+    metrics = dict(metrics, ce=ce, loss=loss)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> Params:
+    l, hd = cfg.num_layers, cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        kv = lambda: jnp.zeros((l, batch, max_seq, cfg.num_kv_heads, hd), dtype)
+        layer_state = {"k": kv(), "v": kv()}
+    elif cfg.family == "ssm":
+        st = SSM.mamba1_init_state(cfg, batch, dtype)
+        layer_state = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (l, *a.shape)), st
+        )
+    elif cfg.family == "hybrid":
+        n_cyc = l // cfg.shared_attn_every
+        st = SSM.mamba2_init_state(cfg, batch, dtype)
+        layer_state = {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None], (n_cyc, cfg.shared_attn_every, *a.shape)
+                ),
+                st,
+            ),
+            "shared_k": jnp.zeros(
+                (n_cyc, batch, max_seq, cfg.num_kv_heads, hd), dtype
+            ),
+            "shared_v": jnp.zeros(
+                (n_cyc, batch, max_seq, cfg.num_kv_heads, hd), dtype
+            ),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return {"index": jnp.int32(0), "layers": layer_state}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    cache: Params,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    """tokens: [B] int32 (last generated).  Returns (logits [B, V], cache).
+
+    ``cache["index"]`` may be scalar (uniform batch) or [B] per-slot
+    positions (continuous batching)."""
+    x = params["embed"].astype(compute_dtype)[tokens][:, None, :]  # [B, 1, d]
+    idx = cache["index"]
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1 else a, t)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+        def body(xc, per_layer):
+            lp, k_c, v_c = per_layer
+            h = L.norm(cfg, xc, lp.get("ln1"))
+            y, (k_c, v_c) = L.attention_decode(cfg, lp["attn"], h, (k_c, v_c), idx)
+            xc = xc + y
+            h = L.norm(cfg, xc, lp.get("ln2"))
+            if cfg.family == "moe":
+                y2, _, _ = MOE.moe_block(cfg, lp["ffn"], h)
+            else:
+                y2 = L.mlp_block(lp["ffn"], h)
+            return xc + y2, (k_c, v_c)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (cast(params["layers"]), cache["layers"]["k"], cache["layers"]["v"])
+        )
+        new_layers = {"k": k_new, "v": v_new}
+    elif cfg.family == "ssm":
+
+        def body(xc, per_layer):
+            lp, st = per_layer
+            h = L.norm(cfg, xc, lp.get("ln"))
+            y, st = SSM.mamba1_step(cfg, lp["mixer"], h[:, 0], st)
+            return xc + y[:, None], st
+
+        x, new_layers = jax.lax.scan(
+            body, x, (cast(params["layers"]), cache["layers"])
+        )
+    else:  # hybrid
+        shared = cast(params["shared"])
+
+        def cycle(xc, per_cycle):
+            cyc_params, mamba_st, k_c, v_c = per_cycle
+            h = L.norm(cfg, xc, shared.get("ln1"))
+            y, (k_c, v_c) = L.attention_decode(cfg, shared["attn"], h, (k_c, v_c), idx)
+            xc = xc + y
+            h = L.norm(cfg, xc, shared.get("ln2"))
+            xc = xc + L.mlp_block(shared["ffn"], h)
+
+            def inner(xi, per_layer):
+                lp, st = per_layer
+                hh = L.norm(cfg, xi, lp.get("ln"))
+                yy, st = SSM.mamba2_step(cfg, lp["mixer"], hh[:, 0], st)
+                return xi + yy[:, None], st
+
+            xc, mamba_st = jax.lax.scan(inner, xc, (cyc_params, mamba_st))
+            return xc, (mamba_st, k_c, v_c)
+
+        x, (m_new, k_new, v_new) = jax.lax.scan(
+            cycle,
+            x,
+            (
+                cast(params["layers"]),
+                cache["layers"]["mamba"],
+                cache["layers"]["shared_k"],
+                cache["layers"]["shared_v"],
+            ),
+        )
+        new_layers = {"mamba": m_new, "shared_k": k_new, "shared_v": v_new}
+
+    x = L.norm(cfg, x, params.get("final_norm"))
+    logits = shard(unembed(cfg, params, x), "btv")[:, 0]
+    return logits, {"index": idx + 1, "layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache construction
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    max_seq: int,
+    *,
+    impl: str = "xla",
+    compute_dtype=jnp.bfloat16,
+    cache_dtype=None,
+) -> tuple[jax.Array, Params]:
+    """Full-sequence prefill.  Returns (last-position logits [B, V], cache).
+    ``cache_dtype`` stores the KV cache quantized (e.g. fp8)."""
+    cache_dtype = cache_dtype or compute_dtype
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        b, s = inputs.shape
+        x = embed_tokens(cfg, params, inputs, compute_dtype)
+    else:
+        b, s, _ = inputs.shape
+        x = inputs.astype(compute_dtype)
+    cache = init_cache(cfg, b, max_seq, cache_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1 else a, t)
+
+    def attn_prefill(lp, h):
+        q, k, v = L._project_qkv(cfg, lp, h, positions)
+        from repro.kernels import ops
+
+        out = ops.attention(q, k, v, causal=True, impl=impl)
+        mask = L.head_mask(cfg, out.dtype)
+        if mask is not None:
+            out = out * mask[None, None, :, None]
+        return jnp.einsum("bshk,hkd->bsd", out, lp["wo"]), k, v
+
+    pad_kv = lambda t: jnp.pad(t, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+        def body(xc, lp):
+            h = L.norm(cfg, xc, lp.get("ln1"))
+            y, k, v = attn_prefill(lp["attn"], h)
+            xc = xc + y
+            h = L.norm(cfg, xc, lp.get("ln2"))
+            if cfg.family == "moe":
+                y2, _, _ = MOE.moe_block(cfg, lp["ffn"], h)
+            else:
+                y2 = L.mlp_block(lp["ffn"], h)
+            return xc + y2, (pad_kv(k).astype(cache_dtype),
+                             pad_kv(v).astype(cache_dtype))
+
+        x, (ks, vs) = jax.lax.scan(body, x, cast(params["layers"]))
+        new_layers = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+
+        def body(xc, lp):
+            h = L.norm(cfg, xc, lp.get("ln"))
+            # run block while capturing final state via the chunked scan
+            y, st = _mamba1_with_state(cfg, lp["mixer"], h, impl)
+            return xc + y, st
+
+        x, new_layers = jax.lax.scan(body, x, cast(params["layers"]))
+        new_layers = jax.tree.map(
+            lambda a, proto: a.astype(proto.dtype),
+            new_layers,
+            init_cache(cfg, b, max_seq, cache_dtype)["layers"],
+        )
+    else:  # hybrid
+        shared = cast(params["shared"])
+
+        def cycle(xc, cyc_params):
+            h = L.norm(cfg, xc, shared.get("ln1"))
+            y, k, v = attn_prefill(shared["attn"], h)
+            xc = xc + y
+            h = L.norm(cfg, xc, shared.get("ln2"))
+            xc = xc + L.mlp_block(shared["ffn"], h)
+
+            def inner(xi, lp):
+                hh = L.norm(cfg, xi, lp.get("ln"))
+                yy, st = _mamba2_with_state(cfg, lp["mixer"], hh)
+                return xi + yy, st
+
+            xc, m_st = jax.lax.scan(inner, xc, cyc_params)
+            return xc, (m_st, pad_kv(k).astype(cache_dtype),
+                        pad_kv(v).astype(cache_dtype))
+
+        x, (m_new, ks, vs) = jax.lax.scan(cycle, x, cast(params["layers"]))
+        proto = init_cache(cfg, b, max_seq, cache_dtype)["layers"]["mamba"]
+        m_new = jax.tree.map(lambda a, pr: a.astype(pr.dtype), m_new, proto)
+        new_layers = {"mamba": m_new, "shared_k": ks, "shared_v": vs}
+
+    x = L.norm(cfg, x, params.get("final_norm"))
+    logits = shard(unembed(cfg, params, x[:, -1:, :]), "btv")[:, 0]
+    return logits, {"index": jnp.int32(s), "layers": new_layers}
+
+
+def _mamba1_with_state(cfg, p, x, impl):
+    """mamba1_block but also returning the final SSM + conv state."""
+    b, s, _ = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    conv_state = xi_raw[:, -(cfg.ssm_conv - 1):, :]
+    xi = jax.nn.silu(SSM.causal_conv(xi_raw, p["conv_w"], p["conv_b"]))
+    dbc = jnp.einsum("bse,ef->bsf", xi, p["x_proj"])
+    dt_r, B_, C_ = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    y, h_fin = SSM.selective_scan_chunked(
+        xi.astype(jnp.float32), dt, B_.astype(jnp.float32), C_.astype(jnp.float32),
+        A, h0, impl=impl,
+    )
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * xi
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), {
+        "conv": conv_state, "h": h_fin,
+    }
+
+
+def _mamba2_with_state(cfg, p, x):
+    from repro.models.layers import rms_norm
+
+    b, s, _ = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    zx = jnp.einsum("bsd,de->bse", x, p["in_proj_zx"])
+    z, xr = jnp.split(zx, 2, axis=-1)
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
+    bc_raw, dt = jnp.split(bcdt, [2 * ds], axis=-1)
+    conv_x_state = xr[:, -(cfg.ssm_conv - 1):, :]
+    conv_bc_state = bc_raw[:, -(cfg.ssm_conv - 1):, :]
+    xi = jax.nn.silu(SSM.causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
+    bc = jax.nn.silu(SSM.causal_conv(bc_raw, p["conv_bc_w"], p["conv_bc_b"]))
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, s, nh, hp).astype(jnp.float32)
+    h0 = jnp.zeros((b, nh, hp, ds), jnp.float32)
+    y, h_fin = SSM.ssd_chunked(
+        xh, dt, B_.astype(jnp.float32), C_.astype(jnp.float32), A, h0
+    )
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), {
+        "conv_x": conv_x_state, "conv_bc": conv_bc_state, "h": h_fin,
+    }

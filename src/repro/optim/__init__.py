@@ -1,0 +1,13 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import ef_int8_compress_decompress
+from repro.optim.schedule import make_schedule
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "make_schedule",
+    "ef_int8_compress_decompress",
+]

@@ -1,0 +1,39 @@
+"""AdamW in pure JAX over arbitrary parameter pytrees (fp32 moments)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, *, lr, cfg: TrainConfig):
+    """One AdamW step.  ``lr`` may be a traced scalar (schedule value)."""
+    step = opt_state["step"] + 1
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + wd * p.astype(jnp.float32)
+        return mu, nu, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], params)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_p = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"mu": mu, "nu": nu, "step": step}

@@ -1,0 +1,51 @@
+"""int8 error-feedback gradient compression for scarce cross-pod links.
+
+Distributed-optimization trick (DESIGN.md §7.4): gradients crossing the
+``pod`` axis are quantized to int8 with a per-leaf scale before the
+all-gather+local-reduce exchange; the quantization residual is carried in an
+error-feedback buffer and added to the next step's gradient, which keeps SGD
+convergence (Karimireddy et al., EF-SGD).  Traffic on the pod links drops
+~4x vs fp32 all-reduce (validated by the §Perf HLO byte counts).
+
+Used inside shard_map over the compressed axis; other axes keep exact psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_compress_decompress(g: jax.Array, err: jax.Array):
+    """Local quantize/dequantize with error feedback (no collective).
+
+    Returns (dequantized gradient, new error buffer).  Composable with any
+    reduction: callers all-gather the int8 payload + scale instead of fp32.
+    """
+    g32 = g.astype(jnp.float32) + err
+    q, scale = _quantize(g32)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """int8 EF exchange over ``axis_name`` (call inside shard_map).
+
+    all-gathers the int8 payload + per-shard scale and reduces locally:
+    link bytes ~= size/4 * (n-1)/n vs fp32 all-reduce's ~2*size*(n-1)/n.
+    """
+    g32 = g.astype(jnp.float32) + err
+    q, scale = _quantize(g32)
+    deq_local = q.astype(jnp.float32) * scale
+    new_err = g32 - deq_local
+    qs = jax.lax.all_gather(q, axis_name)  # [n, ...] int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)  # [n]
+    summed = jnp.tensordot(
+        scales, qs.astype(jnp.float32), axes=((0,), (0,))
+    )
+    return summed, new_err

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (warmup + cosine/linear/constant decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    peak, warm, total = cfg.learning_rate, cfg.warmup_steps, cfg.total_steps
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_frac = jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+        decay_steps = jnp.maximum(total - warm, 1)
+        t = jnp.clip((step - warm) / decay_steps, 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "linear":
+            decay = 1.0 - t
+        else:
+            decay = jnp.ones_like(t)
+        return peak * warm_frac * decay
+
+    return schedule

@@ -1,0 +1,159 @@
+"""Continuous-batching inference engine.
+
+The engine is the *schedulable unit producer* for SpecInF: every public
+operation is a short jitted microstep (one prefill, or one decode step over
+all active slots), which is exactly the quantum the Kernel Barrier meters
+tokens against (DESIGN.md §2, "admission quanta").
+
+Slots: a fixed-capacity decode batch (size ``max_slots``) with per-slot KV
+index, so requests of different lengths run concurrently (continuous
+batching).  Finished slots are refilled from the queue by the caller
+(``core/filling.py`` or the standalone serve loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # [prompt_len] int32
+    max_new_tokens: int
+    request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    arrival_time: float = 0.0
+    online: bool = False
+    # -- filled by the engine --
+    generated: list = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+
+class InferenceEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        max_slots: int = 4,
+        max_seq: int = 128,
+        compute_dtype=jnp.bfloat16,
+    ):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.compute_dtype = compute_dtype
+        self.params = params
+        cache = T.init_cache(cfg, max_slots, max_seq, compute_dtype)
+        cache["index"] = jnp.zeros((max_slots,), jnp.int32)
+        self.cache = cache
+        self.slots: list[Optional[Request]] = [None] * max_slots
+        self.tokens = jnp.zeros((max_slots,), jnp.int32)
+        self.steps_executed = 0
+
+        self._decode = jax.jit(
+            functools.partial(T.decode_step, cfg, compute_dtype=compute_dtype)
+        )
+        self._prefill_one = jax.jit(
+            functools.partial(
+                T.prefill, cfg, max_seq=max_seq, compute_dtype=compute_dtype
+            ),
+            static_argnames=(),
+        )
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request, now: Optional[float] = None) -> bool:
+        """Prefill ``req`` into a free slot.  One engine microstep."""
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        if self.cfg.embed_inputs:
+            # stub frontend: embed prompt tokens through the output table
+            prompt_in = self.params["embed"][prompt].astype(self.compute_dtype)
+        else:
+            prompt_in = prompt
+        logits, cache1 = self._prefill_one(self.params, prompt_in)
+        tok = jnp.argmax(logits[0]).astype(jnp.int32)
+        req.generated.append(int(tok))
+        if req.first_token_time is None:
+            req.first_token_time = time.monotonic() if now is None else now
+        # splice single-request cache into the batch cache at ``slot``
+        self.cache = _splice_cache(self.cfg, self.cache, cache1, slot)
+        self.cache["index"] = self.cache["index"].at[slot].set(len(req.prompt))
+        self.tokens = self.tokens.at[slot].set(tok)
+        self.slots[slot] = req
+        self.steps_executed += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def decode_microstep(self, now: Optional[float] = None) -> list[Request]:
+        """One decode step over all slots; returns requests that finished."""
+        if self.num_active == 0:
+            return []
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = next_tokens
+        self.steps_executed += 1
+        finished = []
+        host_tokens = np.asarray(next_tokens)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(int(host_tokens[i]))
+            if len(req.generated) >= req.max_new_tokens or int(
+                self.cache["index"][i]
+            ) >= self.max_seq - 1:
+                req.finish_time = time.monotonic() if now is None else now
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["index"] = self.cache["index"].at[i].set(0)
+        return finished
+
+    # ------------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        """Weights + cache footprint (Principle-I input)."""
+        param_b = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.params))
+        cache_b = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
+        )
+        return param_b + cache_b
+
+
+def _splice_cache(cfg: ModelConfig, batch_cache, single_cache, slot: int):
+    """Write a 1-slot cache (from prefill) into batch cache position ``slot``.
+
+    Cache layer tensors are stacked [L, B, ...]; slot is on the B axis."""
+
+    def splice(b, s):
+        if b.ndim == 0 or b.shape == s.shape and b.ndim == 1:
+            return b  # index handled by caller
+        return jax.lax.dynamic_update_index_in_dim(
+            b, s[:, 0].astype(b.dtype), slot, axis=1
+        )
+
+    new_layers = jax.tree.map(
+        lambda b, s: splice(b, s), batch_cache["layers"], single_cache["layers"]
+    )
+    return {"index": batch_cache["index"], "layers": new_layers}

@@ -1,0 +1,168 @@
+"""Correctness of the §Perf variants: physical head padding must be
+bit-exact vs the unpadded model; dp256 layout specs must be duplicate-free
+and divisible; MoE dispatch variants must agree."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.runtime import sharding as S
+from repro.runtime.step import abstract_params
+
+
+def _pad_logical_weights(cfg, pad_cfg, params):
+    """Embed logical attention weights into the padded physical slots."""
+    h, hd, kv = cfg.num_heads, cfg.resolved_head_dim, cfg.num_kv_heads
+    gl, gp = h // kv, pad_cfg.num_heads_physical // kv
+
+    def padq(w, axis):
+        segs = jnp.split(w, kv, axis=axis)
+        width = [(0, 0)] * w.ndim
+        width[axis] = (0, gp - gl)
+        return jnp.concatenate([jnp.pad(s, width) for s in segs], axis=axis)
+
+    attn = dict(params["layers"]["attn"])
+    attn["wq"] = padq(attn["wq"], 2)  # [L, d, H, hd]
+    attn["wo"] = padq(attn["wo"], 1)  # [L, H, hd, d]
+    if "bq" in attn:
+        attn["bq"] = padq(attn["bq"], 1)
+    out = dict(params)
+    out["layers"] = dict(params["layers"])
+    out["layers"]["attn"] = attn
+    return out
+
+
+def test_head_padding_bit_exact():
+    cfg = configs.smoke_config("qwen2-7b")
+    cfg = dataclasses.replace(cfg, num_heads=4, num_kv_heads=2)
+    pad_cfg = cfg.padded_for_tp(3)  # group 2 -> 3 slots, H_phys 6
+    assert pad_cfg.num_heads_physical == 6
+    assert pad_cfg.num_heads == 4  # logical arch unchanged
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    padded = _pad_logical_weights(cfg, pad_cfg, params)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+
+    l1, _ = T.forward(cfg, params, toks, compute_dtype=jnp.float32)
+    l2, _ = T.forward(pad_cfg, padded, toks, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    # decode path too
+    _, c1 = T.prefill(cfg, params, toks[:, :8], 16, compute_dtype=jnp.float32)
+    _, c2 = T.prefill(pad_cfg, padded, toks[:, :8], 16,
+                      compute_dtype=jnp.float32)
+    d1, _ = T.decode_step(cfg, params, toks[:, 8], c1,
+                          compute_dtype=jnp.float32)
+    d2, _ = T.decode_step(pad_cfg, padded, toks[:, 8], c2,
+                          compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_padded_for_tp_assignments():
+    qwen2 = configs.get_config("qwen2-7b").padded_for_tp(16)
+    assert qwen2.num_heads_physical == 32  # 28 -> 8 slots x 4 kv groups
+    deepseek = configs.get_config("deepseek-coder-33b").padded_for_tp(16)
+    assert deepseek.num_heads_physical == 64  # 56 -> 8 slots x 8 kv groups
+    olmo = configs.get_config("olmo-1b").padded_for_tp(16)
+    assert not olmo.padded_heads  # 16 % 16 == 0: untouched
+
+
+def test_padding_masks_gradients():
+    """Padded slots must receive exactly zero gradient (arch-equivalence
+    holds throughout training, not just at init)."""
+    cfg = dataclasses.replace(
+        configs.smoke_config("qwen2-7b"), num_heads=4, num_kv_heads=2
+    ).padded_for_tp(3)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+
+    def loss(p):
+        l, _ = T.lm_loss(cfg, p, toks, toks, compute_dtype=jnp.float32)
+        return l
+
+    grads = jax.grad(loss)(params)
+    gq = np.asarray(grads["layers"]["attn"]["wq"])  # [L, d, 6, hd]
+    go = np.asarray(grads["layers"]["attn"]["wo"])  # [L, 6, hd, d]
+    # slots 2 and 5 are padding (group_phys=3, group_log=2)
+    assert np.abs(gq[:, :, [2, 5], :]).max() == 0.0
+    assert np.abs(go[:, [2, 5], :, :]).max() == 0.0
+    assert np.abs(gq[:, :, [0, 1, 3, 4], :]).max() > 0.0
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen3-1.7b", "falcon-mamba-7b"])
+def test_dp256_layout_specs_valid(arch):
+    """dp256 specs: no duplicate axis use, all sharded dims divide."""
+    cfg = configs.get_config(arch)
+    params = abstract_params(cfg)
+    specs = S.param_specs(cfg, params, mesh=MESH, fsdp=True, layout="dp256")
+    opt = S.opt_state_specs(cfg, params, True, MESH, fsdp=True, layout="dp256")
+    for tree in (specs, opt["mu"]):
+        for spec, leaf in zip(
+            jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(params),
+        ):
+            used = []
+            for part, dim in zip(tuple(spec), leaf.shape):
+                if part is None:
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                used += list(axes)
+                size = 1
+                for a in axes:
+                    size *= MESH.shape[a]
+                assert dim % size == 0, (spec, leaf.shape)
+            assert len(used) == len(set(used)), f"duplicate axes in {spec}"
+    assert S.dp_axes(MESH, "dp256") == ("data", "model")
+
+
+def test_moe_dispatch_variants_agree():
+    cfg = configs.smoke_config("moonshot-v1-16b-a3b")
+    p = MOE.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16, cfg.d_model),
+                          jnp.float32)
+    outs = {}
+    for mode in ("vmap", "batched"):
+        MOE.set_dispatch(mode)
+        try:
+            outs[mode] = MOE.moe_block(cfg, p, x)
+        finally:
+            MOE.set_dispatch("vmap")
+    y_v, aux_v, drop_v = outs["vmap"]
+    y_b, aux_b, drop_b = outs["batched"]
+    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_b),
+                               rtol=1e-5, atol=1e-5)
+    assert float(aux_v) == pytest.approx(float(aux_b), rel=1e-5)
+
+
+def test_fp8_kv_cache_decode_runs():
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    _, cache_bf16 = T.prefill(cfg, params, toks, 16)
+    _, cache_fp8 = T.prefill(cfg, params, toks, 16,
+                             cache_dtype=jnp.float8_e4m3fn)
+    assert cache_fp8["layers"]["k"].dtype == jnp.float8_e4m3fn
+    l16, _ = T.decode_step(cfg, params, toks[:, -1], cache_bf16)
+    l8, c8 = T.decode_step(cfg, params, toks[:, -1], cache_fp8)
+    assert c8["layers"]["k"].dtype == jnp.float8_e4m3fn
+    # fp8 cache is lossy but must stay close on a short context
+    a = np.asarray(l16, np.float32)
+    b = np.asarray(l8, np.float32)
+    cos = np.sum(a * b) / (np.linalg.norm(a) * np.linalg.norm(b))
+    assert cos > 0.98, cos

@@ -1,0 +1,153 @@
+"""Unit + property tests for Algorithm 1 (Adaptive Kernel Scheduling) and
+the Bubble Monitor — the paper's §3.3 invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import SpecInFConfig
+from repro.core import AdaptiveKernelScheduler, BubbleMonitor, Phase, Status
+
+
+CFG = SpecInFConfig(alpha=2, beta=3, gamma=2.0, lower_limit=8.0,
+                    upper_limit=64.0, token_seed=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 phase semantics (paper listing, lines 9-15)
+# ---------------------------------------------------------------------------
+
+
+def test_conservative_phase_blocks_everything():
+    s = AdaptiveKernelScheduler(CFG)
+    for zc in range(CFG.alpha):
+        d = s.update(zc)
+        assert d.phase is Phase.CONSERVATIVE
+        assert d.tokens == 0.0
+        assert d.status is Status.BUSY
+
+
+def test_incremental_phase_grows_to_lower_limit():
+    s = AdaptiveKernelScheduler(CFG)
+    seen = []
+    for _ in range(10):
+        d = s.update(CFG.alpha)  # alpha <= Z_c <= beta
+        assert d.phase is Phase.INCREMENTAL
+        assert d.status is Status.BUSY
+        seen.append(d.tokens)
+    assert seen == sorted(seen), "token grant must grow monotonically"
+    assert seen[-1] == CFG.lower_limit
+    assert all(t <= CFG.lower_limit for t in seen)
+
+
+def test_stable_phase_grows_to_upper_limit_and_signals_idle():
+    s = AdaptiveKernelScheduler(CFG)
+    last = 0.0
+    for _ in range(12):
+        d = s.update(CFG.beta + 5)
+        assert d.phase is Phase.STABLE
+        assert d.status is Status.IDLE
+        assert d.tokens >= last
+        last = d.tokens
+    assert last == CFG.upper_limit
+
+
+def test_conservative_resets_token_growth():
+    s = AdaptiveKernelScheduler(CFG)
+    for _ in range(10):
+        s.update(CFG.beta + 1)
+    assert s.update(0).tokens == 0.0
+    # growth restarts from seed, not from the old high-water mark
+    d = s.update(CFG.beta + 1)
+    assert d.tokens == CFG.token_seed * CFG.gamma
+
+
+def test_tokens_divided_among_instances():
+    s1 = AdaptiveKernelScheduler(CFG, num_instances=1)
+    s4 = AdaptiveKernelScheduler(CFG, num_instances=4)
+    for _ in range(10):
+        d1 = s1.update(CFG.beta + 1)
+        d4 = s4.update(CFG.beta + 1)
+    assert d4.tokens == pytest.approx(d1.tokens / 4)
+
+
+@given(
+    zcs=st.lists(st.integers(min_value=0, max_value=50), min_size=1, max_size=200),
+    alpha=st.integers(min_value=1, max_value=5),
+    beta_extra=st.integers(min_value=0, max_value=5),
+    m=st.integers(min_value=1, max_value=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_algorithm1_invariants(zcs, alpha, beta_extra, m):
+    """Properties that must hold for ANY zero-count trace:
+    * tokens == 0 and busy whenever Z_c < alpha
+    * tokens bounded by UL/m always, by LL/m while Z_c <= beta
+    * status idle iff Z_c > beta
+    * tokens never negative
+    """
+    cfg = SpecInFConfig(alpha=alpha, beta=alpha + beta_extra)
+    s = AdaptiveKernelScheduler(cfg, num_instances=m)
+    for zc in zcs:
+        d = s.update(zc)
+        assert d.tokens >= 0
+        assert d.tokens <= cfg.upper_limit / m + 1e-9
+        if zc < alpha:
+            assert d.tokens == 0 and d.status is Status.BUSY
+        elif zc <= cfg.beta:
+            assert d.tokens <= cfg.lower_limit / m + 1e-9
+            assert d.status is Status.BUSY
+        else:
+            assert d.status is Status.IDLE
+
+
+def test_alpha_beta_validation():
+    with pytest.raises(AssertionError):
+        AdaptiveKernelScheduler(SpecInFConfig(alpha=5, beta=2))
+
+
+# ---------------------------------------------------------------------------
+# Bubble Monitor: sliding-window zero-run statistic
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_zero_run_counting():
+    m = BubbleMonitor(CFG)
+    assert m.observe(5) == 0
+    assert m.observe(0) == 1
+    assert m.observe(0) == 2
+    assert m.observe(3) == 0  # any activity resets the run
+    assert m.observe(0) == 1
+
+
+@given(trace=st.lists(st.integers(min_value=0, max_value=3), max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_monitor_matches_reference_semantics(trace):
+    m = BubbleMonitor(CFG)
+    run = 0
+    for count in trace:
+        run = run + 1 if count == 0 else 0
+        assert m.observe(count) == run
+
+
+def test_monitor_utilization():
+    m = BubbleMonitor(CFG)
+    for c in [1, 0, 1, 0]:
+        m.observe(c)
+    assert m.utilization() == pytest.approx(0.5)
+
+
+def test_end_to_end_bubble_to_tokens():
+    """A communication window (zero activity) ramps tokens; compute
+    (non-zero) slams them shut — the paper's core control loop."""
+    mon = BubbleMonitor(CFG)
+    sched = AdaptiveKernelScheduler(CFG)
+    # 1. compute phase: no grants
+    for _ in range(5):
+        d = sched.update(mon.observe(7))
+    assert d.tokens == 0 and d.status is Status.BUSY
+    # 2. bubble: grants ramp up, eventually idle
+    grants = [sched.update(mon.observe(0)) for _ in range(10)]
+    assert grants[-1].status is Status.IDLE
+    assert grants[-1].tokens == CFG.upper_limit
+    # 3. training resumes: immediate conservative cut
+    d = sched.update(mon.observe(9))
+    assert d.tokens == 0 and d.status is Status.BUSY

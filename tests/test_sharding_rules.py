@@ -1,0 +1,141 @@
+"""Sharding-rule coverage: every FULL-config parameter/cache leaf gets a
+spec, every sharded dim divides its mesh axis (jit argument requirement),
+and the batch/activation tables resolve for all 10 archs x 4 shapes.
+
+Runs against abstract shapes only (no allocation) on a symbolic 16x16 mesh —
+safe under the single CPU device because meshes are never materialized into
+device_puts here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.runtime import sharding as S
+from repro.runtime.step import abstract_cache, abstract_params
+
+ARCHS = list(configs.ARCH_IDS)
+
+
+class FakeMesh:
+    """Shape/axis-name stand-in (rule logic only reads these)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisibility(tree_specs, tree_shapes, mesh):
+    leaves_sp = jax.tree.leaves(tree_specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_sh = jax.tree.leaves(tree_shapes)
+    assert len(leaves_sp) == len(leaves_sh)
+    for spec, leaf in zip(leaves_sp, leaves_sh):
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert dim % size == 0, (spec, leaf.shape, dim, size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["single", "multi"])
+def test_param_specs_cover_and_divide(arch, mesh):
+    cfg = configs.get_config(arch)
+    params = abstract_params(cfg)
+    specs = S.param_specs(cfg, params, mesh=mesh, fsdp=True)  # raises on gap
+    _check_divisibility(specs, params, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_opt_state_specs_zero1(arch):
+    cfg = configs.get_config(arch)
+    params = abstract_params(cfg)
+    specs = S.opt_state_specs(cfg, params, True, MESH, fsdp=True)
+    _check_divisibility(specs["mu"], params, MESH)
+    assert specs["step"] == P()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_cover_and_divide(arch, shape_name):
+    cfg = configs.get_config(arch)
+    shape = configs.get_shape(shape_name)
+    ok, _ = configs.shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("shape not applicable")
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    specs = S.cache_specs(cfg, cache, shape, MESH)
+    _check_divisibility(specs["layers"], cache["layers"], MESH)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_activation_specs_complete(arch):
+    cfg = configs.get_config(arch)
+    specs = S.activation_specs(cfg, MESH)
+    for kind in ("btd", "bthd", "btkv", "btf", "btv", "bti", "bv"):
+        assert kind in specs
+
+
+def test_fsdp_shards_large_free_dims():
+    cfg = configs.get_config("deepseek-coder-33b")
+    params = abstract_params(cfg)
+    specs = S.param_specs(cfg, params, mesh=MESH, fsdp=True)
+    flat = {
+        "/".join(str(getattr(p, "key", p)) for p in path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
+    # the big dense FFN weight must carry both model (TP) and data (FSDP)
+    wg = [s for k, s in flat.items() if k.endswith("ffn/wg")][0]
+    axes = set()
+    for part in tuple(wg):
+        if part is not None:
+            axes |= set(part if isinstance(part, tuple) else (part,))
+    assert "model" in axes and "data" in axes, wg
+
+
+def test_nondivisible_heads_fall_back_to_replication():
+    """qwen2 (28H / kv4) cannot shard heads 16 ways -> replicated attention
+    weights (documented baseline limitation, see DESIGN.md)."""
+    cfg = configs.get_config("qwen2-7b")
+    plan = S.ShardingPlan(cfg, MESH)
+    assert not plan.heads_shardable and not plan.kv_shardable
+    olmo = S.ShardingPlan(configs.get_config("olmo-1b"), MESH)
+    assert olmo.heads_shardable and olmo.kv_shardable
+
+
+def test_kv_cache_seq_sharding_when_heads_do_not_divide():
+    cfg = configs.get_config("qwen2-7b")  # kv=4, model=16
+    shape = configs.get_shape("decode_32k")
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    specs = S.cache_specs(cfg, cache, shape, MESH)
+    k_spec = specs["layers"]["k"]
+    assert tuple(k_spec)[2] == "model"  # seq dim carries model
+    assert tuple(k_spec)[3] is None  # kv-head dim replicated
+
+
+def test_unknown_parameter_fails_loudly():
+    cfg = configs.get_config("olmo-1b")
+    bogus = {"layers": {"mystery_weight": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+    with pytest.raises(ValueError, match="no sharding rule"):
+        S.param_specs(cfg, bogus, mesh=MESH)
+
+
+def test_batch_specs_modalities():
+    dense = configs.get_config("qwen2-7b")
+    vlm = configs.get_config("pixtral-12b")
+    bd = S.batch_specs(dense, None, MESH)
+    bv = S.batch_specs(vlm, None, MESH)
+    assert bd["inputs"] == P(("data",), None)
+    assert bv["inputs"] == P(("data",), None, None)  # embeddings input

@@ -1,0 +1,143 @@
+"""Calibrated-timeline simulator tests: the paper's §5.2 orderings must hold
+on every parallel mode (these are the claims EXPERIMENTS.md §Paper-fidelity
+reports against Fig. 4/5/6/7)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import SpecInFConfig
+from repro.core.profiles import dp_profile, mp_profile, pp_profile
+from repro.core.queues import RequestQueue, poisson_arrivals
+from repro.core.simulator import Calibration, make_policy, simulate
+
+CAL = Calibration()
+# busy_hold_ms=0 -> profile-informed pull gating (the benchmark config)
+SPECINF = SpecInFConfig(busy_hold_ms=0.0)
+
+PROFILES = {
+    # communication-heavy DP (40% exposed): the regime the paper's Fig. 1a
+    # motivates filling in
+    "dp": dp_profile("dp", compute_s=0.9, comm_s=0.6, overlap=0.0),
+    # 12 TP stages -> ~40ms per-layer bubbles (a 24-layer profile leaves
+    # 20ms bubbles no 20ms service can speculatively fit)
+    "mp": mp_profile("mp", compute_s=1.0, comm_s=0.5, num_layers=12),
+    "pp": pp_profile("pp", compute_s=0.8, comm_s=0.15),
+}
+
+
+def _run(policy_name, profile, *, offline=1, duration=30.0, online_q=None,
+         online_instances=0):
+    return simulate(
+        profile,
+        make_policy(policy_name, SPECINF),
+        duration_s=duration,
+        offline_instances=offline,
+        offline_microstep_s=0.010,
+        online_queue=online_q,
+        online_instances=online_instances,
+        cal=CAL,
+        specinf_cfg=SPECINF,
+    )
+
+
+@pytest.mark.parametrize("mode", ["dp", "mp", "pp"])
+def test_specinf_preserves_training_throughput(mode):
+    """Headline guarantee: collocated training stays within a few % of
+    exclusive (paper: <= ~7% worst case, typically ~1%)."""
+    r = _run("specinf", PROFILES[mode])
+    assert r.train_throughput_norm >= 0.93, r
+
+
+@pytest.mark.parametrize("mode", ["dp", "mp"])
+def test_coexec_hurts_training(mode):
+    spec = _run("specinf", PROFILES[mode])
+    coex = _run("co-exec", PROFILES[mode])
+    assert coex.train_throughput_norm < spec.train_throughput_norm
+
+
+@pytest.mark.parametrize("mode", ["dp", "mp", "pp"])
+def test_specinf_beats_tgs_offline(mode):
+    spec = _run("specinf", PROFILES[mode])
+    tgs = _run("tgs", PROFILES[mode])
+    assert spec.offline_throughput_per_s > tgs.offline_throughput_per_s, (spec, tgs)
+
+
+@pytest.mark.parametrize("mode", ["dp", "mp"])
+def test_specinf_beats_mps_offline(mode):
+    """Paper Fig. 4/5(a): 1.23x-3.5x (DP) and up to 1.8x (MP) over MPS."""
+    spec = _run("specinf", PROFILES[mode])
+    mps = _run("mps", PROFILES[mode])
+    assert spec.offline_throughput_per_s > mps.offline_throughput_per_s
+
+
+def test_exclusive_upper_bounds_offline():
+    """One dedicated device is the normalization point (norm == 1)."""
+    r = _run("exclusive", PROFILES["dp"])
+    assert r.offline_norm == pytest.approx(1.0, rel=0.05)
+
+
+def test_specinf_offline_fraction_of_exclusive():
+    """Paper: SpecInF reaches 23-84% of Exclusive's offline throughput."""
+    spec = _run("specinf", PROFILES["dp"])
+    assert 0.15 <= spec.offline_norm <= 1.0
+
+
+def _online_queue(seed=0):
+    reqs = poisson_arrivals(
+        mean_interval_s=0.1, num_requests=150, service_s=0.020, seed=seed,
+    )
+    return RequestQueue(reqs)
+
+
+@pytest.mark.parametrize("mode", ["dp", "mp"])
+def test_specinf_online_p95_beats_coexec_and_mps(mode):
+    """Paper Fig. 4/5(b): SpecInF lowest p95 except Exclusive.  Measured in
+    the paper's saturating-load regime (p95 reflects effective bubble
+    service capacity) with 3 collocated online instances (§3.3)."""
+    results = {}
+    for pol in ("specinf", "co-exec", "mps"):
+        q = RequestQueue(poisson_arrivals(
+            mean_interval_s=0.040, num_requests=600, service_s=0.020, seed=0,
+        ))
+        results[pol] = _run(
+            pol, PROFILES[mode], offline=0, online_q=q, online_instances=3,
+            duration=30.0,
+        )
+    assert results["specinf"].online_p95_s < results["co-exec"].online_p95_s
+    assert results["specinf"].online_p95_s < results["mps"].online_p95_s
+
+
+def test_multi_instance_sublinear_scaling():
+    """Paper Fig. 7: offline throughput grows sub-linearly with instances
+    while training throughput stays guarded."""
+    prev = 0.0
+    for m in (1, 2, 4):
+        r = _run("specinf", PROFILES["dp"], offline=m)
+        assert r.offline_throughput_per_s >= prev * 0.98
+        assert r.train_throughput_norm >= 0.90
+        prev = r.offline_throughput_per_s
+    r1 = _run("specinf", PROFILES["dp"], offline=1)
+    r4 = _run("specinf", PROFILES["dp"], offline=4)
+    assert r4.offline_throughput_per_s < 4 * r1.offline_throughput_per_s
+
+
+def test_monitor_overhead_is_small():
+    """Paper Fig. 8: collocation machinery without requests costs ~1%."""
+    base = _run("exclusive", PROFILES["dp"], offline=0)
+    idle = _run("specinf", PROFILES["dp"], offline=0)
+    overhead = 1.0 - idle.train_iterations / base.train_iterations
+    assert overhead <= 0.02, overhead
+
+
+def test_pp_gains_are_marginal():
+    """Paper §5.2: PP's short per-microbatch gaps shrink SpecInF's edge —
+    'comparable to MPS' in PP vs a clear win in DP."""
+    dp_gain = (
+        _run("specinf", PROFILES["dp"]).offline_throughput_per_s
+        / max(_run("mps", PROFILES["dp"]).offline_throughput_per_s, 1e-9)
+    )
+    pp_gain = (
+        _run("specinf", PROFILES["pp"]).offline_throughput_per_s
+        / max(_run("mps", PROFILES["pp"]).offline_throughput_per_s, 1e-9)
+    )
+    assert pp_gain < dp_gain
+    assert pp_gain < 2.0, "PP advantage should be marginal (comparable to MPS)"
