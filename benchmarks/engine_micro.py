@@ -24,18 +24,64 @@ def _time_us(fn, n=50, warmup=3):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _fresh_engine(cfg, params, max_seq=256):
+    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=max_seq)
+    for _ in range(4):
+        engine.add_request(Request(prompt=np.arange(8), max_new_tokens=10**9))
+    return engine
+
+
 def bench_engine_microstep():
+    """Old synced path vs the fused sync-free decode loop, plus the prefill
+    compile-cache row — the before/after evidence for the flash-decode fast
+    path (DESIGN.md §3).  Capacity (max_seq=256) comfortably exceeds the
+    total microsteps timed, so no slot retires mid-measurement."""
     rows = []
     cfg = configs.smoke_config("qwen3-1.7b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=64)
-    for i in range(4):
-        engine.add_request(Request(prompt=np.arange(8), max_new_tokens=10**9))
 
-    us = _time_us(lambda: engine.decode_microstep())
-    rows.append(("micro", "engine:decode_microstep(4 slots)", "real",
-                 "us_per_call", round(us, 1)))
+    def measure(label, policy, engine, call, steps_per_call):
+        t0, s0 = engine.d2h_transfers, engine.steps_executed
+        us = _time_us(call, n=25) / steps_per_call
+        d2h = (engine.d2h_transfers - t0) / max(engine.steps_executed - s0, 1)
+        assert engine.num_active == 4, "slots retired mid-benchmark"
+        rows.append(("micro", f"engine:{label}", policy,
+                     "us_per_microstep", round(us, 1)))
+        rows.append(("micro", f"engine:tokens_per_s({label})", policy,
+                     "tok_per_s", round(4 / (us * 1e-6), 1)))
+        rows.append(("micro", f"engine:d2h_per_microstep({label})", policy,
+                     "count", round(d2h, 3)))
+
+    # legacy path: one decode step, host sync every microstep
+    engine = _fresh_engine(cfg, params)
+    measure("decode_microstep(4 slots)", "legacy", engine,
+            lambda: engine.decode_microstep(), 1)
+    # fused path: k microsteps on-device, one transfer per loop
+    for k in (1, 8):
+        eng = _fresh_engine(cfg, params)
+        measure(f"decode_loop(k={k})", "fused", eng,
+                lambda: eng.decode_loop(k), k)
     return rows
+
+
+def bench_prefill_buckets():
+    """Prefill compile-cache control: 20 distinct prompt lengths through the
+    power-of-two buckets must compile a handful of programs, where the seed
+    engine compiled one per distinct length."""
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=128)
+    lengths = list(range(3, 23))  # 20 distinct prompt lengths
+    for n in lengths:
+        # benchmark measures prefill compiles only; recycle the slots freely
+        engine.slots = [None] * engine.max_slots
+        engine.add_request(Request(prompt=np.arange(n), max_new_tokens=1))
+    return [
+        ("micro", "prefill:compiled_programs_20_lengths", "bucketed",
+         "count", engine.prefill_compile_count),
+        ("micro", "prefill:compiled_programs_20_lengths", "seed_equiv",
+         "count", len(set(lengths))),
+    ]
 
 
 def bench_control_plane():
@@ -61,4 +107,8 @@ def bench_control_plane():
 
 
 def all_rows():
-    return bench_engine_microstep() + bench_control_plane()
+    return (
+        bench_engine_microstep()
+        + bench_prefill_buckets()
+        + bench_control_plane()
+    )

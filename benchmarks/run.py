@@ -17,6 +17,9 @@ def main() -> None:
                     help="figure prefixes to run (fig4a ... fig8, headline, "
                          "roofline, micro)")
     ap.add_argument("--results-dir", default="results/dryrun")
+    ap.add_argument("--bench-json", default="BENCH_engine.json",
+                    help="where to write the engine microstep rows as JSON "
+                         "(perf trajectory for future PRs); '' disables")
     args = ap.parse_args()
 
     want = lambda name: args.only is None or any(
@@ -44,7 +47,24 @@ def main() -> None:
     if want("micro"):
         from benchmarks import engine_micro
 
-        rows += engine_micro.all_rows()
+        t_micro = time.time()
+        micro_rows = engine_micro.all_rows()
+        rows += micro_rows
+        if args.bench_json:
+            import json
+
+            with open(args.bench_json, "w") as f:
+                json.dump(
+                    {
+                        "schema": ["figure", "case", "policy", "metric", "value"],
+                        "rows": [list(r) for r in micro_rows],
+                        "elapsed_s": round(time.time() - t_micro, 2),
+                    },
+                    f,
+                    indent=2,
+                )
+            print(f"# wrote {args.bench_json} ({len(micro_rows)} rows)",
+                  file=sys.stderr)
     if want("roofline"):
         from benchmarks import roofline
 

@@ -28,7 +28,7 @@ from repro.configs.base import SpecInFConfig
 from repro.core.bubble_monitor import BubbleMonitor
 from repro.core.profiles import IterationProfile
 from repro.core.scheduler import AdaptiveKernelScheduler, Status
-from repro.serving.engine import InferenceEngine, Request
+from repro.serving.engine import DECODE_K_BUCKETS, InferenceEngine, Request
 
 
 @dataclasses.dataclass
@@ -78,45 +78,83 @@ class SpecInFRuntime:
             online_requests or [], key=lambda r: r.arrival_time
         )
         self._window_s = cfg.window_ms / 1e3
+        # Bind the engine to the runtime's virtual clock: every request
+        # timestamp then comes from ONE timebase (never mixed with
+        # time.monotonic), and latencies are internally consistent.
+        self._vnow = 0.0
+        if engine is not None:
+            engine.clock = lambda: self._vnow
 
     # ------------------------------------------------------------------
-    def _advance_windows(self, span_s: float, activity: int) -> None:
-        """Feed the monitor/scheduler for every 2 ms window inside a span."""
-        n = max(1, int(round(span_s / self._window_s)))
+    def _observe_windows(self, n: int, activity: int = 0):
+        """Feed monitor + Algorithm 1 for ``n`` windows; returns the last
+        decision.  One observe per window keeps accounting identical whether
+        microsteps run fused or one-by-one."""
+        d = None
         for _ in range(n):
             zc = self.monitor.observe(activity)
             d = self.scheduler.update(zc)
             ph = d.phase.value
             self.metrics.phase_counts[ph] = self.metrics.phase_counts.get(ph, 0) + 1
+        return d
+
+    def _advance_windows(self, span_s: float, activity: int) -> None:
+        """Feed the monitor/scheduler for every 2 ms window inside a span."""
+        self._observe_windows(
+            max(1, int(round(span_s / self._window_s))), activity
+        )
+
+    @staticmethod
+    def _k_bucket(steps: int) -> int:
+        """Largest fused-loop bucket not exceeding ``steps`` (min 1)."""
+        return max(pick_bucket(steps, 1.0, DECODE_K_BUCKETS), 1)
 
     def _fill_bubble(self, bubble_s: float) -> None:
-        """Run real engine microsteps inside a virtual bubble of bubble_s."""
+        """Fill a virtual bubble of ``bubble_s`` with real engine compute.
+
+        Microsteps run through the sync-free fused path
+        (``engine.decode_loop``): Algorithm 1's token grant picks a k bucket,
+        the device runs k microsteps with one host round-trip, and the
+        monitor/scheduler are fed the k windows the loop covered."""
         if self.engine is None:
             self.metrics.virtual_time_s += bubble_s
             self._advance_windows(bubble_s, activity=0)
             return
         now = self.metrics.virtual_time_s
         spent = 0.0
+        step_cost = self.decode_microstep_s
+        cost_tokens = step_cost / 1e-3  # 1 token == 1 ms (KB metering)
         while spent < bubble_s:
-            zc = self.monitor.observe(0)
-            d = self.scheduler.update(zc)
-            ph = d.phase.value
-            self.metrics.phase_counts[ph] = self.metrics.phase_counts.get(ph, 0) + 1
-            step_cost = self.decode_microstep_s
-            cost_tokens = step_cost / 1e-3  # 1 token == 1 ms (KB metering)
+            d = self._observe_windows(1)
             did_work = False
+            budget_steps = max(int((bubble_s - spent) / step_cost), 1)
             # online pull-and-execute on idle signal
             if d.status is Status.IDLE and self._online_pending and (
                 self._online_pending[0].arrival_time <= now + spent
             ):
                 req = self._online_pending.pop(0)
-                ok = self.engine.add_request(req, now=now + spent)
+                self._vnow = now + spent
+                ok = self.engine.add_request(req)
                 if ok:
-                    while self.engine.slots[_slot_of(self.engine, req)] is not None:
-                        self.engine.decode_microstep(now=now + spent)
-                        spent += step_cost
-                        if spent >= bubble_s:
-                            break
+                    # the outer observe above covers one window of the first
+                    # inner loop; every later window gets its own observe
+                    covered = 1
+                    total0 = self.engine.generated_tokens_total
+                    req0 = len(req.generated)
+                    while req.finish_time is None and spent < bubble_s:
+                        left = max(int((bubble_s - spent) / step_cost), 1)
+                        want = max(req.max_new_tokens - len(req.generated), 1)
+                        k = self._k_bucket(min(left, want))
+                        self._vnow = now + spent + k * step_cost
+                        self.engine.decode_loop(k)
+                        spent += k * step_cost
+                        self._observe_windows(k - covered)
+                        covered = 0
+                    # offline slots piggyback on the online loop's fused
+                    # microsteps; credit their tokens to the offline meter
+                    self.metrics.offline_tokens_generated += (
+                        self.engine.generated_tokens_total - total0
+                    ) - (len(req.generated) - req0)
                     if req.finish_time is not None:
                         self.metrics.online_served += 1
                         self.metrics.online_latencies_s.append(
@@ -125,14 +163,23 @@ class SpecInFRuntime:
                     did_work = True
             # offline microsteps under token metering
             elif d.tokens >= cost_tokens and self.engine.num_active > 0:
-                finished = self.engine.decode_microstep(now=now + spent)
-                self.metrics.offline_microsteps += 1
-                self.metrics.offline_tokens_generated += self.engine.num_active + len(
-                    finished
+                k = self._k_bucket(
+                    min(int(d.tokens // cost_tokens), budget_steps)
                 )
+                before = self.engine.generated_tokens_total
+                self._vnow = now + spent + k * step_cost
+                self.engine.decode_loop(k)
+                self.metrics.offline_microsteps += k
+                self.metrics.offline_tokens_generated += (
+                    self.engine.generated_tokens_total - before
+                )
+                spent += k * step_cost
+                self._observe_windows(k - 1)
                 did_work = True
-            spent += step_cost if did_work else self._window_s
+            if not did_work:
+                spent += self._window_s
         self.metrics.virtual_time_s += bubble_s
+        self._vnow = self.metrics.virtual_time_s
 
     # ------------------------------------------------------------------
     def run(self, num_iterations: int) -> FillingMetrics:
@@ -152,13 +199,6 @@ class SpecInFRuntime:
         return self.metrics
 
 
-def _slot_of(engine: InferenceEngine, req: Request) -> int:
-    for i, r in enumerate(engine.slots):
-        if r is req:
-            return i
-    return -1
-
-
 # ---------------------------------------------------------------------------
 # Beyond-paper: fused collocated step (bucketed k)
 # ---------------------------------------------------------------------------
@@ -169,21 +209,37 @@ def make_collocated_step(
     decode_step_fn: Callable,
     *,
     k_buckets: tuple[int, ...] = (0, 1, 2, 4, 8),
+    decode_loop_fn: Optional[Callable] = None,
 ):
     """Build jitted fused programs ``{k: fn}`` where fn runs the train step
     plus k chained decode microsteps in one XLA program.  The decode chain
     has no data dependence on the train step, so the latency-hiding scheduler
     overlaps it with the training collectives (verified in §Perf by the
     fused program's collective/compute schedule).
+
+    The decode chain is a ``lax.scan`` over microsteps (the engine's
+    ``decode_loop`` shape), so the fused program's HLO stays O(1) in k
+    instead of unrolling — all buckets share the same compile-size budget.
+    Pass ``decode_loop_fn(params, tokens, cache, k) -> (tokens, cache)`` to
+    supply a custom loop (e.g. ``transformer.decode_loop`` with masking);
+    by default the chain is built from ``decode_step_fn``.
     """
+    if decode_loop_fn is None:
+
+        def decode_loop_fn(params, tokens, cache, k):
+            def body(carry, _):
+                t, c = carry
+                logits, c = decode_step_fn(params, t, c)
+                t = jax.numpy.argmax(logits, axis=-1).astype(jax.numpy.int32)
+                return (t, c), None
+
+            (t, c), _ = jax.lax.scan(body, (tokens, cache), None, length=k)
+            return t, c
 
     def fused(k):
         def fn(train_state, batch, infer_params, tokens, cache):
             new_state, metrics = train_step_fn(train_state, batch)
-            t, c = tokens, cache
-            for _ in range(k):
-                logits, c = decode_step_fn(infer_params, t, c)
-                t = jax.numpy.argmax(logits, axis=-1).astype(jax.numpy.int32)
+            t, c = decode_loop_fn(infer_params, tokens, cache, k)
             return new_state, metrics, t, c
 
         return jax.jit(fn, donate_argnums=(0, 4))

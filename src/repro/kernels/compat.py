@@ -1,0 +1,11 @@
+"""JAX version compatibility shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` upstream;
+resolve whichever this JAX exposes so the kernels run on both sides of the
+rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -1,0 +1,155 @@
+"""Flash-decode Pallas TPU kernel: single-token batched decode attention.
+
+Serving decode is the hottest path in the repo — every engine microstep runs
+it once per layer per slot batch — so it gets its own kernel instead of the
+masked dense ``attention_xla`` over the full ``S_max`` KV cache.
+
+Layout: q [B, H, hd] (one query token per slot), k/v [B, S_max, kvH, hd]
+(the KV cache in its native engine layout — no transpose copy on the hot
+path), lengths [B] int32 (valid KV entries per slot; 0 marks an empty slot).
+
+Grid: (B, kvH, num_kv_blocks).  Each program owns one slot's GQA group
+(``H // kvH`` query heads) and accumulates the online softmax over KV tiles
+in VMEM scratch, exactly like ``flash_attention.py``.  Two length-awareness
+levers make the kernel ragged-batch fast:
+
+  * ``lengths`` rides in as a scalar-prefetch operand
+    (``PrefetchScalarGridSpec``), so the KV BlockSpec index_map can clamp the
+    tile index to the slot's last useful block — tiles past a slot's length
+    re-address the same block and the pipeline skips their DMA entirely.
+  * the kernel body early-exits (``pl.when(k_start < length)``) for tiles
+    past the length, so their FLOPs are skipped too.
+
+``interpret=True`` runs the same kernel body on CPU for CI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    lengths_ref,  # scalar prefetch: [B] int32
+    q_ref,  # [1, 1, gp, hd]
+    k_ref, v_ref,  # [1, bk, 1, hd]
+    o_ref,  # [1, 1, gp, hd]
+    acc_ref, m_ref, l_ref,  # VMEM scratch: [gp, hd], [gp, 1], [gp, 1] (fp32)
+    *,
+    block_k: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = lengths_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [gp, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)  # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [gp, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # length == 0 slots never accumulate: l stays 0, clamped -> output 0.
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, H, hd]; k/v: [B, S_max, kvH, hd]; lengths: [B] int32 valid-KV
+    counts.  Returns [B, H, hd].  Slots with ``lengths == 0`` return zeros."""
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, f"q heads {h} not a multiple of kv heads {kvh}"
+    group = h // kvh
+    gp = max(8, group)  # sublane-pad the tiny GQA-group axis
+    block_k = min(block_k, s)
+    nk = (s + block_k - 1) // block_k
+    pad_s = nk * block_k - s
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    qr = q.reshape(b, kvh, group, hd)
+    if gp != group:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+    lengths = jnp.minimum(lengths.astype(jnp.int32), s)
+
+    def q_map(bi, hi, ki, lens):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, lens):
+        # Clamp past-length tiles onto the slot's last useful block: the
+        # pipeline sees a repeated index and skips the DMA (ragged early-exit).
+        last = jnp.maximum(pl.cdiv(lens[bi], block_k) - 1, 0)
+        return (bi, jnp.minimum(ki, last), hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, hd), q_map),
+            pl.BlockSpec((1, block_k, 1, hd), kv_map),
+            pl.BlockSpec((1, block_k, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((gp, hd), jnp.float32),
+            pltpu.VMEM((gp, 1), jnp.float32),
+            pltpu.VMEM((gp, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, sm_scale=hd**-0.5
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(lengths, qr, k, v)
+    return out[:, :, :group].reshape(b, h, hd)

@@ -58,6 +58,55 @@ def attention(
     raise ValueError(f"unknown attention impl {impl!r}")
 
 
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Single-token decode attention over a ragged KV cache.
+
+    q: [B, H, hd]; k/v_cache: [B, S_max, kvH, hd]; lengths: [B] int32 valid-KV
+    counts (0 == empty slot -> zero output).  Returns [B, H, hd].
+
+    ``impl``:
+      * "auto"   -- pallas on TPU, xla elsewhere (interpret-mode pallas is
+                    correct but slow; CI forces it explicitly)
+      * "xla"    -- length-masked dense attention over S_max
+      * "pallas" -- flash-decode kernel (interpret=True automatically off-TPU)
+    """
+    from repro.models import layers as L
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        s_max = k_cache.shape[1]
+        length_mask = jnp.arange(s_max)[None, :] < lengths[:, None]
+        out = L.attention_xla(
+            q[:, None],
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            causal=False,
+            length_mask=length_mask,
+        )[:, 0]
+        # empty slots are all-masked -> uniform softmax garbage; zero them to
+        # match the kernel's defined output
+        return jnp.where(lengths[:, None, None] > 0, out, 0.0)
+    if impl == "pallas":
+        from repro.kernels.decode_attention import decode_attention as _kernel
+
+        return _kernel(
+            q,
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            lengths,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown decode attention impl {impl!r}")
+
+
 def ssm_scan_chunk(xi, dt, B_, C_, A, h0):
     """Pallas selective-scan chunk (interpret mode off-TPU)."""
     from repro.kernels.ssm_scan import ssm_scan_chunk as _kernel

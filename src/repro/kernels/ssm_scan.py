@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _ssm_kernel(
     xi_ref, dt_ref,  # [1, Q, bd]
@@ -94,7 +96,7 @@ def ssm_scan_chunk(
             jax.ShapeDtypeStruct((b, di, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

@@ -31,8 +31,11 @@ def main() -> None:
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    t0 = time.monotonic()
+    # single clock source: engine timestamps share the arrival timebase
     engine = InferenceEngine(cfg, params, max_slots=args.slots,
-                             max_seq=args.max_seq)
+                             max_seq=args.max_seq,
+                             clock=lambda: time.monotonic() - t0)
 
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(
@@ -48,14 +51,14 @@ def main() -> None:
         for i in range(args.requests)
     ]
     done: list[Request] = []
-    t0 = time.monotonic()
     while len(done) < args.requests:
-        now = time.monotonic() - t0
+        now = engine.clock()
         while pending and pending[0].arrival_time <= now and engine.free_slots():
-            engine.add_request(pending[0], now=now)
+            engine.add_request(pending[0])
             pending.pop(0)
         if engine.num_active:
-            done += engine.decode_microstep(now=time.monotonic() - t0)
+            # fused sync-free microsteps; small k keeps admission responsive
+            done += engine.decode_loop(4 if not pending else 1)
         else:
             time.sleep(0.001)
     lat = [r.finish_time - r.arrival_time for r in done]

@@ -268,10 +268,15 @@ def attention_decode(
     x: jax.Array,
     kv_cache: tuple[jax.Array, jax.Array],
     cache_index: jax.Array,
+    *,
+    impl: str = "auto",
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """One-token decode.  x: [B, 1, d]; cache k/v: [B, S_max, kvH, hd];
     cache_index: [] or [B] int32 current length(s) — per-slot indices allow
-    continuous batching (each slot at its own position)."""
+    continuous batching (each slot at its own position).
+
+    The attention core is the flash-decode path (``ops.decode_attention``):
+    length-aware over the ragged batch instead of dense over S_max."""
     b = x.shape[0]
     idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
     positions = idx[:, None]
@@ -282,16 +287,12 @@ def attention_decode(
     )
     k_cache = upd(k_cache, k_new.astype(k_cache.dtype), idx)
     v_cache = upd(v_cache, v_new.astype(v_cache.dtype), idx)
-    s_max = k_cache.shape[1]
-    length_mask = jnp.arange(s_max)[None, :] <= idx[:, None]
+    from repro.kernels import ops  # local import to avoid cycles
+
     out = shard(
-        attention_xla(
-            q,
-            k_cache.astype(q.dtype),
-            v_cache.astype(q.dtype),
-            causal=False,
-            length_mask=length_mask,
-        ),
+        ops.decode_attention(q[:, 0], k_cache, v_cache, idx + 1, impl=impl)[
+            :, None
+        ],
         "bthd",
     )
     mask = head_mask(cfg, out.dtype)

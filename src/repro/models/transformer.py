@@ -3,9 +3,15 @@
 One parameter pytree, ``lax.scan`` over stacked layer weights (keeps HLO and
 compile time depth-independent), three entry points:
 
-  * ``forward``      -- train / full-sequence logits (tokens or embeddings in)
-  * ``prefill``      -- forward + build decode cache
-  * ``decode_step``  -- one token with KV cache / SSM state
+  * ``forward``           -- train / full-sequence logits (tokens or
+                             embeddings in)
+  * ``prefill``           -- forward + build decode cache (bucket-padded
+                             prompts via ``length``)
+  * ``prefill_into_slot`` -- prefill one prompt straight into a batch cache
+                             slot (jitted; no host-side cache splice)
+  * ``decode_step``       -- one token with KV cache / SSM state
+  * ``decode_loop``       -- k fused microsteps via lax.scan with per-slot
+                             active masking (sync-free serving fast path)
 
 Hybrid (Zamba2) runs an outer scan over cycles: one *shared* attention+MLP
 block (single weight set) followed by ``shared_attn_every`` Mamba2 layers per
@@ -286,11 +292,13 @@ def decode_step(
     cache: Params,
     *,
     compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
 ) -> tuple[jax.Array, Params]:
     """tokens: [B] int32 (last generated).  Returns (logits [B, V], cache).
 
     ``cache["index"]`` may be scalar (uniform batch) or [B] per-slot
-    positions (continuous batching)."""
+    positions (continuous batching).  ``attn_impl`` picks the decode
+    attention core (see ``ops.decode_attention``)."""
     x = params["embed"].astype(compute_dtype)[tokens][:, None, :]  # [B, 1, d]
     idx = cache["index"]
     cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
@@ -301,7 +309,9 @@ def decode_step(
         def body(xc, per_layer):
             lp, k_c, v_c = per_layer
             h = L.norm(cfg, xc, lp.get("ln1"))
-            y, (k_c, v_c) = L.attention_decode(cfg, lp["attn"], h, (k_c, v_c), idx)
+            y, (k_c, v_c) = L.attention_decode(
+                cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
+            )
             xc = xc + y
             h = L.norm(cfg, xc, lp.get("ln2"))
             if cfg.family == "moe":
@@ -331,7 +341,9 @@ def decode_step(
         def cycle(xc, per_cycle):
             cyc_params, mamba_st, k_c, v_c = per_cycle
             h = L.norm(cfg, xc, shared.get("ln1"))
-            y, (k_c, v_c) = L.attention_decode(cfg, shared["attn"], h, (k_c, v_c), idx)
+            y, (k_c, v_c) = L.attention_decode(
+                cfg, shared["attn"], h, (k_c, v_c), idx, impl=attn_impl
+            )
             xc = xc + y
             h = L.norm(cfg, xc, shared.get("ln2"))
             xc = xc + L.mlp_block(shared["ffn"], h)
@@ -363,6 +375,75 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# Fused decode loop (sync-free serving fast path)
+# ---------------------------------------------------------------------------
+
+
+def decode_loop(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    cache: Params,
+    remaining: Optional[jax.Array] = None,
+    *,
+    k: int,
+    max_seq: Optional[int] = None,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+) -> tuple[jax.Array, Params, jax.Array, jax.Array, jax.Array]:
+    """Run ``k`` greedy decode microsteps entirely on-device via ``lax.scan``.
+
+    ``remaining``: [B] int32 per-slot token budgets.  A slot is *active* while
+    ``remaining > 0`` and (when ``max_seq`` is set) its cache index is below
+    ``max_seq - 1``.  Inactive slots are frozen in place — token, cache index,
+    and budget untouched — so finished requests never need a host round-trip
+    mid-loop.  ``remaining=None`` runs all slots unconditionally (uniform
+    batch; used by the fused collocated train+decode step, where the cache
+    index may be scalar).
+
+    Returns ``(tokens, cache, remaining, toks_seq, steps)`` where
+    ``toks_seq[j]`` is the [B] token vector after microstep ``j`` (frozen
+    slots repeat their last token) and ``steps[i]`` counts microsteps slot
+    ``i`` was active for.  The caller fetches everything it needs with ONE
+    device->host transfer after the loop.
+    """
+    b = tokens.shape[0]
+    masked = remaining is not None
+
+    def body(carry, _):
+        toks, c, rem = carry
+        idx = c["index"]
+        logits, new_c = decode_step(
+            cfg, params, toks, c, compute_dtype=compute_dtype,
+            attn_impl=attn_impl,
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if masked:
+            active = rem > 0
+            if max_seq is not None:
+                active = active & (idx < max_seq - 1)
+            toks = jnp.where(active, next_tok, toks)
+            c = {
+                "index": jnp.where(active, new_c["index"], idx),
+                "layers": new_c["layers"],
+            }
+            rem = jnp.where(active, rem - 1, rem)
+        else:
+            toks, c = next_tok, new_c
+            active = jnp.ones((b,), bool)
+        return (toks, c, rem), (toks, active)
+
+    rem0 = remaining if masked else jnp.zeros((b,), jnp.int32)
+    (tokens, cache, rem), (toks_seq, active_seq) = jax.lax.scan(
+        body, (tokens, cache, rem0), None, length=k
+    )
+    steps = active_seq.sum(axis=0).astype(jnp.int32) if k else jnp.zeros(
+        (b,), jnp.int32
+    )
+    return tokens, cache, rem, toks_seq, steps
+
+
+# ---------------------------------------------------------------------------
 # Prefill: forward + cache construction
 # ---------------------------------------------------------------------------
 
@@ -376,9 +457,16 @@ def prefill(
     impl: str = "xla",
     compute_dtype=jnp.bfloat16,
     cache_dtype=None,
+    length: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Params]:
     """Full-sequence prefill.  Returns (last-position logits [B, V], cache).
-    ``cache_dtype`` stores the KV cache quantized (e.g. fp8)."""
+    ``cache_dtype`` stores the KV cache quantized (e.g. fp8).
+
+    ``length`` (traced [] int32) marks the true prompt length when ``inputs``
+    is zero-padded to a compile bucket: logits are taken at ``length - 1`` and
+    the cache index starts at ``length``.  Pad positions only ever produce
+    K/V entries *beyond* the cache index, which decode overwrites before
+    reading (see DESIGN.md §3), so padding never leaks into results."""
     cache_dtype = cache_dtype or compute_dtype
     if inputs.dtype in (jnp.int32, jnp.int64):
         b, s = inputs.shape
@@ -424,7 +512,7 @@ def prefill(
         def body(xc, lp):
             h = L.norm(cfg, xc, lp.get("ln"))
             # run block while capturing final state via the chunked scan
-            y, st = _mamba1_with_state(cfg, lp["mixer"], h, impl)
+            y, st = _mamba1_with_state(cfg, lp["mixer"], h, impl, length=length)
             return xc + y, st
 
         x, new_layers = jax.lax.scan(body, x, cast(params["layers"]))
@@ -445,7 +533,7 @@ def prefill(
 
             def inner(xi, lp):
                 hh = L.norm(cfg, xi, lp.get("ln"))
-                yy, st = _mamba2_with_state(cfg, lp["mixer"], hh)
+                yy, st = _mamba2_with_state(cfg, lp["mixer"], hh, length=length)
                 return xi + yy, st
 
             xc, m_st = jax.lax.scan(inner, xc, cyc_params)
@@ -458,23 +546,50 @@ def prefill(
         new_layers = {"mamba": m_new, "shared_k": ks, "shared_v": vs}
 
     x = L.norm(cfg, x, params.get("final_norm"))
-    logits = shard(unembed(cfg, params, x[:, -1:, :]), "btv")[:, 0]
-    return logits, {"index": jnp.int32(s), "layers": new_layers}
+    if length is None:
+        last, index = x[:, -1:, :], jnp.int32(s)
+    else:
+        index = jnp.asarray(length, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(x, index - 1, 1, axis=1)
+    logits = shard(unembed(cfg, params, last), "btv")[:, 0]
+    return logits, {"index": index, "layers": new_layers}
 
 
-def _mamba1_with_state(cfg, p, x, impl):
+def _ssm_tail_state(x, length, n):
+    """Last ``n`` timesteps before ``length`` with implicit left zero-pad —
+    the decode conv state for a bucket-padded prompt of true ``length``."""
+    if length is None:
+        return x[:, -n:, :]
+    xp = jnp.pad(x, ((0, 0), (n, 0), (0, 0)))
+    return jax.lax.dynamic_slice_in_dim(
+        xp, jnp.asarray(length, jnp.int32), n, axis=1
+    )
+
+
+def _ssm_dt_mask(dt, length):
+    """Zero the SSM step size at pad positions (>= length): ``dt == 0`` makes
+    the recurrence a no-op (decay exp(0*A) == 1, input term 0), so a bucket-
+    padded prompt leaves the state exactly where the real tokens left it."""
+    if length is None:
+        return dt
+    valid = jnp.arange(dt.shape[1]) < jnp.asarray(length, jnp.int32)
+    return dt * valid[None, :, None]
+
+
+def _mamba1_with_state(cfg, p, x, impl, length=None):
     """mamba1_block but also returning the final SSM + conv state."""
     b, s, _ = x.shape
     di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     xi_raw, z = jnp.split(xz, 2, axis=-1)
-    conv_state = xi_raw[:, -(cfg.ssm_conv - 1):, :]
+    conv_state = _ssm_tail_state(xi_raw, length, cfg.ssm_conv - 1)
     xi = jax.nn.silu(SSM.causal_conv(xi_raw, p["conv_w"], p["conv_b"]))
     dbc = jnp.einsum("bse,ef->bsf", xi, p["x_proj"])
     dt_r, B_, C_ = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
     dt = jax.nn.softplus(
         jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]) + p["dt_bias"]
     ).astype(jnp.float32)
+    dt = _ssm_dt_mask(dt, length)
     A = -jnp.exp(p["A_log"])
     h0 = jnp.zeros((b, di, ds), jnp.float32)
     y, h_fin = SSM.selective_scan_chunked(
@@ -488,7 +603,65 @@ def _mamba1_with_state(cfg, p, x, impl):
     }
 
 
-def _mamba2_with_state(cfg, p, x):
+def prefill_into_slot(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    length: jax.Array,
+    slot: jax.Array,
+    cache: Params,
+    *,
+    max_seq: int,
+    impl: str = "xla",
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    """Prefill one bucket-padded prompt and write its K/V (or SSM state)
+    directly into the batch decode cache at ``slot`` — one jitted program,
+    no host-side cache splice.
+
+    inputs: [1, S_bucket] int32 tokens (or [1, S_bucket, d] embeddings),
+    zero-padded to a power-of-two bucket; length: [] int32 true prompt
+    length; slot: [] int32 target batch slot (traced, so one compiled
+    program serves every slot).  ``cache`` should be donated by the caller's
+    jit so the slot write is performed in place.
+
+    Returns ``(first generated token [] int32, updated batch cache)``.
+    """
+    logits, cache1 = prefill(
+        cfg, params, inputs, max_seq, impl=impl, compute_dtype=compute_dtype,
+        cache_dtype=jax.tree.leaves(cache["layers"])[0].dtype, length=length,
+    )
+    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def upd(axis):
+        return lambda b, s: jax.lax.dynamic_update_index_in_dim(
+            b, jnp.squeeze(s, axis).astype(b.dtype), slot, axis=axis
+        )
+
+    # Batch axis is 1 for [L, B, ...] leaves; the hybrid family's per-cycle
+    # mamba state is [n_cyc, shared_attn_every, B, ...] — batch on axis 2.
+    if cfg.family == "hybrid":
+        new_layers = {
+            "mamba": jax.tree.map(
+                upd(2), cache["layers"]["mamba"], cache1["layers"]["mamba"]
+            ),
+            "shared_k": upd(1)(
+                cache["layers"]["shared_k"], cache1["layers"]["shared_k"]
+            ),
+            "shared_v": upd(1)(
+                cache["layers"]["shared_v"], cache1["layers"]["shared_v"]
+            ),
+        }
+    else:
+        new_layers = jax.tree.map(
+            upd(1), cache["layers"], cache1["layers"]
+        )
+    index = cache["index"].at[slot].set(jnp.asarray(length, jnp.int32))
+    return tok, {"index": index, "layers": new_layers}
+
+
+def _mamba2_with_state(cfg, p, x, length=None):
     from repro.models.layers import rms_norm
 
     b, s, _ = x.shape
@@ -497,12 +670,13 @@ def _mamba2_with_state(cfg, p, x):
     z, xr = jnp.split(zx, 2, axis=-1)
     bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
     bc_raw, dt = jnp.split(bcdt, [2 * ds], axis=-1)
-    conv_x_state = xr[:, -(cfg.ssm_conv - 1):, :]
-    conv_bc_state = bc_raw[:, -(cfg.ssm_conv - 1):, :]
+    conv_x_state = _ssm_tail_state(xr, length, cfg.ssm_conv - 1)
+    conv_bc_state = _ssm_tail_state(bc_raw, length, cfg.ssm_conv - 1)
     xi = jax.nn.silu(SSM.causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
     bc = jax.nn.silu(SSM.causal_conv(bc_raw, p["conv_bc_w"], p["conv_bc_b"]))
     B_, C_ = jnp.split(bc, 2, axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = _ssm_dt_mask(dt, length)
     A = -jnp.exp(p["A_log"])
     xh = xi.reshape(b, s, nh, hp).astype(jnp.float32)
     h0 = jnp.zeros((b, nh, hp, ds), jnp.float32)

@@ -9,6 +9,21 @@ Slots: a fixed-capacity decode batch (size ``max_slots``) with per-slot KV
 index, so requests of different lengths run concurrently (continuous
 batching).  Finished slots are refilled from the queue by the caller
 (``core/filling.py`` or the standalone serve loop).
+
+Fast path (DESIGN.md §3):
+
+* ``decode_loop(k)`` fuses k microsteps into one jitted ``lax.scan`` with
+  per-slot active/done masking and donated cache buffers — exactly ONE
+  device->host transfer per loop, vs ``1 + num_active`` for the legacy
+  ``decode_microstep`` (kept for comparison and single-step callers).
+* Prefill pads prompts to power-of-two length buckets, so 20 distinct prompt
+  lengths compile a handful of programs instead of 20, and
+  ``prefill_into_slot`` writes K/V straight into the batch cache on device
+  (no host-side cache splice).
+
+Timebase: all request timestamps come from ONE clock chosen at construction
+(``clock=``, default ``time.monotonic``).  Collocated runtimes rebind it to
+their virtual clock so latencies never mix timebases.
 """
 from __future__ import annotations
 
@@ -16,7 +31,7 @@ import dataclasses
 import functools
 import itertools
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +41,10 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
 _req_counter = itertools.count()
+
+#: Fused-loop sizes the engine compiles on demand; callers bucket their k so
+#: the set of compiled programs stays bounded (DESIGN.md §2).
+DECODE_K_BUCKETS = (1, 2, 4, 8)
 
 
 @dataclasses.dataclass
@@ -50,27 +69,49 @@ class InferenceEngine:
         max_slots: int = 4,
         max_seq: int = 128,
         compute_dtype=jnp.bfloat16,
+        decode_impl: str = "auto",
+        prefill_impl: str = "xla",
+        clock: Optional[Callable[[], float]] = None,
+        min_prefill_bucket: int = 8,
     ):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.compute_dtype = compute_dtype
         self.params = params
+        self.clock: Callable[[], float] = clock or time.monotonic
+        self.min_prefill_bucket = min_prefill_bucket
         cache = T.init_cache(cfg, max_slots, max_seq, compute_dtype)
         cache["index"] = jnp.zeros((max_slots,), jnp.int32)
         self.cache = cache
         self.slots: list[Optional[Request]] = [None] * max_slots
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.steps_executed = 0
+        # perf counters (benchmarks/engine_micro.py reads these)
+        self.d2h_transfers = 0  # device->host syncs issued by engine code
+        self.generated_tokens_total = 0
+        self.prefill_bucket_lengths: set[int] = set()
 
         self._decode = jax.jit(
-            functools.partial(T.decode_step, cfg, compute_dtype=compute_dtype)
-        )
-        self._prefill_one = jax.jit(
             functools.partial(
-                T.prefill, cfg, max_seq=max_seq, compute_dtype=compute_dtype
+                T.decode_step, cfg, compute_dtype=compute_dtype,
+                attn_impl=decode_impl,
+            )
+        )
+        self._decode_loop = jax.jit(
+            functools.partial(
+                T.decode_loop, cfg, compute_dtype=compute_dtype,
+                attn_impl=decode_impl, max_seq=max_seq,
             ),
-            static_argnames=(),
+            static_argnames=("k",),
+            donate_argnames=("tokens", "cache", "remaining"),
+        )
+        self._prefill_slot = jax.jit(
+            functools.partial(
+                T.prefill_into_slot, cfg, max_seq=max_seq,
+                impl=prefill_impl, compute_dtype=compute_dtype,
+            ),
+            donate_argnames=("cache",),
         )
 
     # ------------------------------------------------------------------
@@ -81,35 +122,102 @@ class InferenceEngine:
     def num_active(self) -> int:
         return sum(r is not None for r in self.slots)
 
+    @property
+    def prefill_compile_count(self) -> int:
+        """Distinct prefill programs compiled (one per prompt-length bucket)."""
+        return len(self.prefill_bucket_lengths)
+
+    def _bucket_len(self, n: int) -> int:
+        """Power-of-two compile bucket for a prompt of length ``n``."""
+        b = self.min_prefill_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq)
+
     # ------------------------------------------------------------------
-    def add_request(self, req: Request, now: Optional[float] = None) -> bool:
+    def add_request(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot.  One engine microstep."""
         free = self.free_slots()
         if not free:
             return False
         slot = free[0]
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        n = len(req.prompt)
+        if n > self.max_seq:
+            raise ValueError(
+                f"prompt of {n} tokens exceeds engine max_seq={self.max_seq}; "
+                "refusing to truncate silently"
+            )
+        sb = self._bucket_len(n)
+        prompt = np.zeros((1, sb), np.int32)
+        prompt[0, :n] = np.asarray(req.prompt, np.int32)
         if self.cfg.embed_inputs:
             # stub frontend: embed prompt tokens through the output table
-            prompt_in = self.params["embed"][prompt].astype(self.compute_dtype)
+            prompt_in = self.params["embed"][jnp.asarray(prompt)].astype(
+                self.compute_dtype
+            )
         else:
-            prompt_in = prompt
-        logits, cache1 = self._prefill_one(self.params, prompt_in)
-        tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            prompt_in = jnp.asarray(prompt)
+        self.prefill_bucket_lengths.add(sb)
+        tok, self.cache = self._prefill_slot(
+            self.params, prompt_in, jnp.int32(n), jnp.int32(slot), self.cache
+        )
         req.generated.append(int(tok))
+        self.d2h_transfers += 1
+        self.generated_tokens_total += 1
         if req.first_token_time is None:
-            req.first_token_time = time.monotonic() if now is None else now
-        # splice single-request cache into the batch cache at ``slot``
-        self.cache = _splice_cache(self.cfg, self.cache, cache1, slot)
-        self.cache["index"] = self.cache["index"].at[slot].set(len(req.prompt))
+            req.first_token_time = self.clock()
         self.tokens = self.tokens.at[slot].set(tok)
         self.slots[slot] = req
         self.steps_executed += 1
         return True
 
     # ------------------------------------------------------------------
-    def decode_microstep(self, now: Optional[float] = None) -> list[Request]:
-        """One decode step over all slots; returns requests that finished."""
+    def decode_loop(self, k: int) -> list[Request]:
+        """Run ``k`` fused decode microsteps on-device; returns requests that
+        finished.  One device->host transfer total, regardless of ``k``.
+
+        Finished slots freeze mid-loop on device (token, index, and budget
+        held in place), so the host never needs to intervene between
+        microsteps.  Callers should pick ``k`` from ``DECODE_K_BUCKETS`` to
+        bound the number of compiled programs."""
+        if self.num_active == 0 or k <= 0:
+            return []
+        remaining = np.zeros((self.max_slots,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
+        tokens, cache, rem, toks_seq, steps = self._decode_loop(
+            self.params, self.tokens, self.cache, jnp.asarray(remaining), k=k
+        )
+        self.tokens, self.cache = tokens, cache
+        toks_np, steps_np, rem_np, idx_np = jax.device_get(
+            (toks_seq, steps, rem, cache["index"])
+        )
+        self.d2h_transfers += 1  # the single fused fetch above
+        self.steps_executed += k
+        now = self.clock()
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            n = int(steps_np[i])
+            req.generated.extend(int(t) for t in toks_np[:n, i])
+            self.generated_tokens_total += n
+            if rem_np[i] == 0 or idx_np[i] >= self.max_seq - 1:
+                req.finish_time = now
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["index"] = self.cache["index"].at[i].set(0)
+        return finished
+
+    # ------------------------------------------------------------------
+    def decode_microstep(self) -> list[Request]:
+        """One decode step over all slots; returns requests that finished.
+
+        Legacy single-step path: syncs to host every step (1 transfer for the
+        token batch + 1 per active slot for the finish check).  Kept for
+        single-step callers and as the benchmark baseline — the fast path is
+        ``decode_loop``."""
         if self.num_active == 0:
             return []
         logits, self.cache = self._decode(self.params, self.tokens, self.cache)
@@ -118,14 +226,19 @@ class InferenceEngine:
         self.steps_executed += 1
         finished = []
         host_tokens = np.asarray(next_tokens)
+        self.d2h_transfers += 1
+        now = self.clock()
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             req.generated.append(int(host_tokens[i]))
-            if len(req.generated) >= req.max_new_tokens or int(
-                self.cache["index"][i]
-            ) >= self.max_seq - 1:
-                req.finish_time = time.monotonic() if now is None else now
+            self.generated_tokens_total += 1
+            index_i = int(self.cache["index"][i])
+            self.d2h_transfers += 1  # per-slot finish-check sync
+            if len(req.generated) >= req.max_new_tokens or index_i >= (
+                self.max_seq - 1
+            ):
+                req.finish_time = now
                 finished.append(req)
                 self.slots[i] = None
                 self.cache["index"] = self.cache["index"].at[i].set(0)
@@ -139,21 +252,3 @@ class InferenceEngine:
             x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
         )
         return param_b + cache_b
-
-
-def _splice_cache(cfg: ModelConfig, batch_cache, single_cache, slot: int):
-    """Write a 1-slot cache (from prefill) into batch cache position ``slot``.
-
-    Cache layer tensors are stacked [L, B, ...]; slot is on the B axis."""
-
-    def splice(b, s):
-        if b.ndim == 0 or b.shape == s.shape and b.ndim == 1:
-            return b  # index handled by caller
-        return jax.lax.dynamic_update_index_in_dim(
-            b, s[:, 0].astype(b.dtype), slot, axis=1
-        )
-
-    new_layers = jax.tree.map(
-        lambda b, s: splice(b, s), batch_cache["layers"], single_cache["layers"]
-    )
-    return {"index": batch_cache["index"], "layers": new_layers}

@@ -1,6 +1,8 @@
 """Property tests for the collocation planner (paper §3.2 Principles I/II)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs.base import SpecInFConfig

@@ -1,11 +1,13 @@
 """Optimizer, data-pipeline, and checkpointing substrate tests."""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.checkpoint.checkpointer import Checkpointer

@@ -1,7 +1,9 @@
 """Unit + property tests for Algorithm 1 (Adaptive Kernel Scheduling) and
 the Bubble Monitor — the paper's §3.3 invariants."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs.base import SpecInFConfig
