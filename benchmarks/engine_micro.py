@@ -84,6 +84,67 @@ def bench_prefill_buckets():
     ]
 
 
+def bench_spec_decode(accept_p=0.9, gamma=4):
+    """Verified-token throughput of the fused speculative loop
+    (``spec_decode_loop``) vs the plain fused ``decode_loop`` on the same
+    target model — the before/after evidence for the draft/verify subsystem
+    (DESIGN.md §4).
+
+    Runs in simulated-acceptance mode: the draft steps, chunk-verify pass,
+    rollback, and host accounting are all the real code paths; only the
+    per-token accept/reject outcome is drawn from a Bernoulli(p) stream, so
+    CPU CI can measure the loop's cost profile at a chosen acceptance rate
+    without a genuinely-aligned draft model (random-init drafts accept ~0)."""
+    from repro.configs.base import SpecDecodeConfig, draft_config
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecodeConfig(mode="simulated", sim_accept_p=accept_p)
+    dcfg = draft_config(cfg, spec)
+    dparams = T.init_params(dcfg, jax.random.PRNGKey(1))
+    max_seq = 2048
+    rows = []
+
+    def throughput(engine, call, n=20, warmup=3):
+        for _ in range(warmup):
+            call()
+        g0, d0 = engine.generated_tokens_total, engine.d2h_transfers
+        t0 = time.perf_counter()
+        for _ in range(n):
+            call()
+        dt = time.perf_counter() - t0
+        assert engine.num_active == 4, "slots retired mid-benchmark"
+        return (engine.generated_tokens_total - g0) / dt, (
+            engine.d2h_transfers - d0
+        ) / n
+
+    plain = _fresh_engine(cfg, params, max_seq=max_seq)
+    plain_tps, _ = throughput(plain, lambda: plain.decode_loop(8))
+    eng = InferenceEngine(
+        cfg, params, max_slots=4, max_seq=max_seq,
+        draft_cfg=dcfg, draft_params=dparams, spec=spec,
+    )
+    for _ in range(4):
+        eng.add_request(Request(prompt=np.arange(8), max_new_tokens=10**9))
+    spec_tps, spec_d2h = throughput(
+        eng, lambda: eng.spec_decode_loop(4, gamma)
+    )
+    tokens_per_round = eng.generated_tokens_total / max(eng.spec_rounds, 1) / 4
+    rows.append(("micro", "spec:verified_tokens_per_s(gamma=%d)" % gamma,
+                 "spec", "tok_per_s", round(spec_tps, 1)))
+    rows.append(("micro", "spec:plain_tokens_per_s(decode_loop k=8)",
+                 "fused", "tok_per_s", round(plain_tps, 1)))
+    rows.append(("micro", "spec:speedup_vs_plain", "spec", "ratio",
+                 round(spec_tps / plain_tps, 3)))
+    rows.append(("micro", "spec:acceptance_rate(simulated p=%g)" % accept_p,
+                 "spec", "fraction", round(eng.spec_acceptance_rate, 3)))
+    rows.append(("micro", "spec:verified_tokens_per_round_per_slot", "spec",
+                 "count", round(tokens_per_round, 2)))
+    rows.append(("micro", "spec:d2h_per_loop", "spec", "count",
+                 round(spec_d2h, 3)))
+    return rows
+
+
 def bench_control_plane():
     """Monitor + Algorithm 1 cost per 2ms window — must be tiny vs the
     window itself for the ~1% overhead claim to hold."""
@@ -110,5 +171,6 @@ def all_rows():
     return (
         bench_engine_microstep()
         + bench_prefill_buckets()
+        + bench_spec_decode()
         + bench_control_plane()
     )

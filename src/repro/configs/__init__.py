@@ -15,8 +15,10 @@ from repro.configs.base import (
     TRAIN_4K,
     ModelConfig,
     ShapeConfig,
+    SpecDecodeConfig,
     SpecInFConfig,
     TrainConfig,
+    draft_config,
     mesh_axes,
     shape_applicable,
 )

@@ -298,6 +298,69 @@ class SpecInFConfig:
     max_instances: int = 8
 
 
+# ---------------------------------------------------------------------------
+# Speculative decoding (draft / target pairing)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Draft/target speculative-decoding pairing (``repro.spec``).
+
+    The draft shares the target's family and vocabulary (verification is
+    token-for-token) but runs a fraction of the depth/width; acceptance
+    quality is a property of how well the draft tracks the target, while
+    *correctness* is guaranteed by the verify pass alone."""
+
+    draft_layers: int = 1  # draft depth (hybrid: rounded up to one cycle)
+    draft_width_factor: float = 0.5  # d_model/d_ff shrink (1.0 = same width)
+    gamma_buckets: tuple[int, ...] = (1, 2, 4)  # draft-length compile buckets
+    mode: str = "greedy"  # "greedy" | "sample" | "simulated"
+    sim_accept_p: float = 0.9  # Bernoulli acceptance for "simulated" mode
+    draft_cost_ratio: float = 0.25  # draft step cost / target step cost
+    accept_ewma: float = 0.5  # acceptance-rate smoothing (gamma controller)
+
+
+def draft_config(target: ModelConfig, spec: SpecDecodeConfig = SpecDecodeConfig()) -> ModelConfig:
+    """Derive a cheap draft model from ``target``: same family, vocabulary,
+    and per-head dimension (token ids verify one-for-one; the engine keeps
+    separate target and draft caches), with ``spec.draft_layers`` layers and
+    width — d_model, d_ff, and the head *counts* — scaled by
+    ``spec.draft_width_factor`` (GQA grouping and SSM divisibility
+    preserved)."""
+    layers = max(1, spec.draft_layers)
+    changes: dict = {"name": target.name + "-draft"}
+    if target.shared_attn_every:
+        every = target.shared_attn_every
+        changes["num_layers"] = max(every, -(-layers // every) * every)
+    else:
+        changes["num_layers"] = min(layers, target.num_layers)
+    wf = spec.draft_width_factor
+    if wf != 1.0:
+        hd = target.resolved_head_dim
+        if target.num_heads:
+            heads = max(1, int(round(target.num_heads * wf)))
+            kv = max(1, min(target.num_kv_heads, heads))
+            while heads % kv:  # GQA grouping must stay exact
+                kv -= 1
+            changes["num_heads"] = heads
+            changes["num_kv_heads"] = kv
+            changes["head_dim"] = hd
+            changes["d_model"] = max(hd, int(round(target.d_model * wf)))
+        else:
+            changes["d_model"] = max(16, int(round(target.d_model * wf)))
+        if target.ssm_version == 2:  # Mamba2 heads must divide d_inner
+            di = target.ssm_expand * changes["d_model"]
+            changes["d_model"] = (
+                -(-di // target.ssm_head_dim) * target.ssm_head_dim
+            ) // target.ssm_expand
+        if target.d_ff:
+            changes["d_ff"] = max(16, int(round(target.d_ff * wf)))
+        if target.dt_rank:
+            changes["dt_rank"] = max(1, int(round(target.dt_rank * wf)))
+    return dataclasses.replace(target, **changes)
+
+
 def mesh_axes(multi_pod: bool = False) -> tuple[tuple[int, ...], tuple[str, ...]]:
     if multi_pod:
         return (2, 16, 16), ("pod", "data", "model")

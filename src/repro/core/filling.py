@@ -15,6 +15,13 @@ Two modes (DESIGN.md §2):
   dependence between them, so the XLA scheduler may overlap inference compute
   with training collectives.  k is bucketed to avoid recompiles; Algorithm 1
   picks the bucket each iteration.
+
+Engines built with a draft/target pairing route every quantum through the
+speculative loop instead (``engine.spec_decode_loop``), and the token grant
+is spent in *verified* tokens: the gamma controller (``spec.controller``)
+maps Algorithm-1's phase + observed acceptance to a draft length, and the k
+bucket is sized by the expected verified-token yield per round
+(DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ from repro.core.bubble_monitor import BubbleMonitor
 from repro.core.profiles import IterationProfile
 from repro.core.scheduler import AdaptiveKernelScheduler, Status
 from repro.serving.engine import DECODE_K_BUCKETS, InferenceEngine, Request
+from repro.spec.controller import AdaptiveGammaController
 
 
 @dataclasses.dataclass
@@ -41,6 +49,7 @@ class FillingMetrics:
     online_latencies_s: list = dataclasses.field(default_factory=list)
     virtual_time_s: float = 0.0
     phase_counts: dict = dataclasses.field(default_factory=dict)
+    spec_rounds: int = 0
 
     def p95_latency_s(self) -> float:
         if not self.online_latencies_s:
@@ -63,6 +72,7 @@ class SpecInFRuntime:
         online_requests: Optional[list[Request]] = None,
         cfg: SpecInFConfig = SpecInFConfig(),
         decode_microstep_s: float = 0.005,
+        gamma_controller: Optional[AdaptiveGammaController] = None,
     ):
         self.train_step = train_step
         self.state = train_state
@@ -74,6 +84,20 @@ class SpecInFRuntime:
         self.scheduler = AdaptiveKernelScheduler(cfg, num_instances=1)
         self.metrics = FillingMetrics()
         self.decode_microstep_s = decode_microstep_s
+        # Speculative engines spend grants in verified tokens: the gamma
+        # controller sizes each round from phase + observed acceptance,
+        # parameterized by the engine's draft/target pairing config.
+        self.gamma_ctrl = gamma_controller
+        if (
+            self.gamma_ctrl is None
+            and engine is not None
+            and engine.spec_enabled
+        ):
+            sc = engine.spec_cfg
+            self.gamma_ctrl = AdaptiveGammaController(
+                sc.gamma_buckets, ewma=sc.accept_ewma,
+                draft_cost_ratio=sc.draft_cost_ratio,
+            )
         self._online_pending = sorted(
             online_requests or [], key=lambda r: r.arrival_time
         )
@@ -109,13 +133,53 @@ class SpecInFRuntime:
         """Largest fused-loop bucket not exceeding ``steps`` (min 1)."""
         return max(pick_bucket(steps, 1.0, DECODE_K_BUCKETS), 1)
 
+    def _spec_min_grant(self, phase) -> float:
+        """Smallest Algorithm-1 grant (in verified tokens) that pays for one
+        speculative round at the phase's draft length."""
+        g = self.gamma_ctrl.gamma_for(phase)
+        return self.gamma_ctrl.expected_tokens_per_round(g)
+
+    def _spec_quantum(
+        self, phase, token_budget: float, max_spend_s: float, base_now: float
+    ) -> tuple[int, float]:
+        """One fused speculative loop sized so its *expected verified-token*
+        yield stays within ``token_budget`` — the grant is spent in verified
+        tokens, not microsteps.  The gamma controller picks the draft length
+        from the Algorithm-1 phase and the engine's observed acceptance;
+        each round costs ``round_cost_steps`` microstep-equivalents of
+        virtual time.  Returns ``(microstep_equivalents, elapsed_s)`` so the
+        caller observes monitor windows in proportion to the virtual time
+        actually spent (one observe per microstep-equivalent, the same
+        convention as the plain path)."""
+        g = self.gamma_ctrl.gamma_for(phase)
+        exp_tokens = self.gamma_ctrl.expected_tokens_per_round(g)
+        round_s = self.decode_microstep_s * self.gamma_ctrl.round_cost_steps(g)
+        afford = max(int(token_budget / max(exp_tokens, 1e-9)), 1)
+        left = max(int(max_spend_s / round_s), 1)
+        k = self._k_bucket(min(afford, left))
+        dt = k * round_s
+        self._vnow = base_now + dt
+        a0, p0 = self.engine.spec_accepted, self.engine.spec_drafted
+        self.engine.spec_decode_loop(k, g)
+        self.gamma_ctrl.observe(
+            self.engine.spec_accepted - a0, self.engine.spec_drafted - p0
+        )
+        self.metrics.spec_rounds += k
+        quanta = max(k, int(round(dt / self.decode_microstep_s)))
+        return quanta, dt
+
     def _fill_bubble(self, bubble_s: float) -> None:
         """Fill a virtual bubble of ``bubble_s`` with real engine compute.
 
         Microsteps run through the sync-free fused path
         (``engine.decode_loop``): Algorithm 1's token grant picks a k bucket,
         the device runs k microsteps with one host round-trip, and the
-        monitor/scheduler are fed the k windows the loop covered."""
+        monitor/scheduler are fed the k windows the loop covered.
+
+        Speculative engines route every quantum through
+        ``engine.spec_decode_loop`` instead: each round multiplies the
+        tokens extracted per grant by the accepted draft length, so the
+        grant is spent in *verified* tokens (``_spec_quantum``)."""
         if self.engine is None:
             self.metrics.virtual_time_s += bubble_s
             self._advance_windows(bubble_s, activity=0)
@@ -124,6 +188,7 @@ class SpecInFRuntime:
         spent = 0.0
         step_cost = self.decode_microstep_s
         cost_tokens = step_cost / 1e-3  # 1 token == 1 ms (KB metering)
+        use_spec = self.engine.spec_enabled and self.gamma_ctrl is not None
         while spent < bubble_s:
             d = self._observe_windows(1)
             did_work = False
@@ -142,12 +207,19 @@ class SpecInFRuntime:
                     total0 = self.engine.generated_tokens_total
                     req0 = len(req.generated)
                     while req.finish_time is None and spent < bubble_s:
-                        left = max(int((bubble_s - spent) / step_cost), 1)
                         want = max(req.max_new_tokens - len(req.generated), 1)
-                        k = self._k_bucket(min(left, want))
-                        self._vnow = now + spent + k * step_cost
-                        self.engine.decode_loop(k)
-                        spent += k * step_cost
+                        if use_spec:
+                            k, dt = self._spec_quantum(
+                                d.phase, float(want), bubble_s - spent,
+                                now + spent,
+                            )
+                        else:
+                            left = max(int((bubble_s - spent) / step_cost), 1)
+                            k = self._k_bucket(min(left, want))
+                            dt = k * step_cost
+                            self._vnow = now + spent + dt
+                            self.engine.decode_loop(k)
+                        spent += dt
                         self._observe_windows(k - covered)
                         covered = 0
                     # offline slots piggyback on the online loop's fused
@@ -161,19 +233,33 @@ class SpecInFRuntime:
                             req.finish_time - req.arrival_time
                         )
                     did_work = True
-            # offline microsteps under token metering
-            elif d.tokens >= cost_tokens and self.engine.num_active > 0:
-                k = self._k_bucket(
-                    min(int(d.tokens // cost_tokens), budget_steps)
-                )
+            # offline quanta under token metering (speculative engines spend
+            # the grant in verified tokens, plain engines in microsteps);
+            # either way the grant must cover one whole quantum — a spec
+            # round is only admitted once the grant affords its expected
+            # verified-token yield, so small conservative/incremental grants
+            # never over-spend the bubble budget
+            elif self.engine.num_active > 0 and (
+                d.tokens >= self._spec_min_grant(d.phase)
+                if use_spec else d.tokens >= cost_tokens
+            ):
                 before = self.engine.generated_tokens_total
-                self._vnow = now + spent + k * step_cost
-                self.engine.decode_loop(k)
+                if use_spec:
+                    k, dt = self._spec_quantum(
+                        d.phase, d.tokens, bubble_s - spent, now + spent
+                    )
+                else:
+                    k = self._k_bucket(
+                        min(int(d.tokens // cost_tokens), budget_steps)
+                    )
+                    dt = k * step_cost
+                    self._vnow = now + spent + dt
+                    self.engine.decode_loop(k)
                 self.metrics.offline_microsteps += k
                 self.metrics.offline_tokens_generated += (
                     self.engine.generated_tokens_total - before
                 )
-                spent += k * step_cost
+                spent += dt
                 self._observe_windows(k - 1)
                 did_work = True
             if not did_work:

@@ -107,6 +107,61 @@ def decode_attention(
     raise ValueError(f"unknown decode attention impl {impl!r}")
 
 
+def verify_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Chunk-verify attention over a ragged KV cache (speculative decoding).
+
+    q: [B, T, H, hd] — the T = gamma+1 chunk queries per slot; k/v_cache:
+    [B, S_max, kvH, hd] with the chunk's own K/V already written at positions
+    ``lengths - T .. lengths - 1``; lengths: [B] int32 valid-KV counts
+    *including* the chunk (0 == empty slot -> zero output).  Chunk query t
+    attends to ``kpos <= lengths - T + t`` — the prefix plus the chunk's own
+    causal triangle.  Returns [B, T, H, hd].
+
+    ``impl``:
+      * "auto"   -- pallas on TPU, xla elsewhere
+      * "xla"    -- chunk-causal length-masked dense attention over S_max
+      * "pallas" -- chunk-verify kernel (interpret=True automatically off-TPU)
+    """
+    from repro.models import layers as L
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        b, t, h, hd = q.shape
+        s_max = k_cache.shape[1]
+        kk = L._repeat_kv(k_cache.astype(q.dtype), h)
+        vv = L._repeat_kv(v_cache.astype(q.dtype), h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+        scores = scores * hd**-0.5
+        kpos = jnp.arange(s_max)
+        bound = (lengths - t)[:, None] + jnp.arange(t)[None, :]  # [B, T]
+        mask = kpos[None, None, :] <= bound[:, :, None]  # [B, T, S_max]
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        # empty slots are all-masked -> uniform softmax garbage; zero them to
+        # match the kernel's defined output
+        return jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
+    if impl == "pallas":
+        from repro.kernels.verify_attention import verify_attention as _kernel
+
+        return _kernel(
+            q,
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            lengths,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown verify attention impl {impl!r}")
+
+
 def ssm_scan_chunk(xi, dt, B_, C_, A, h0):
     """Pallas selective-scan chunk (interpret mode off-TPU)."""
     from repro.kernels.ssm_scan import ssm_scan_chunk as _kernel

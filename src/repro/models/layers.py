@@ -302,6 +302,48 @@ def attention_decode(
     return y, (k_cache, v_cache)
 
 
+def attention_verify(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    kv_cache: tuple[jax.Array, jax.Array],
+    cache_index: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Chunk-verify decode: score T = gamma+1 chunk tokens in one pass.
+
+    x: [B, T, d] — embeddings of the speculative chunk (current token +
+    gamma draft tokens); cache k/v: [B, S_max, kvH, hd]; cache_index: [] or
+    [B] int32 per-slot prefix length(s).  Writes the chunk's K/V at
+    positions ``index .. index + T - 1`` and attends each chunk token to the
+    prefix plus the chunk's own causal triangle (``ops.verify_attention``).
+    Rollback after acceptance only rewinds ``index`` — rejected positions'
+    K/V entries sit beyond the rewound index and are rewritten before ever
+    being attended to (the same stale-overwrite invariant bucket-padded
+    prefill relies on, DESIGN.md §3/§4)."""
+    b, t, _ = x.shape
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    positions = idx[:, None] + jnp.arange(t)[None, :]  # [B, T]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    k_cache, v_cache = kv_cache
+    upd = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )
+    k_cache = upd(k_cache, k_new.astype(k_cache.dtype), idx)
+    v_cache = upd(v_cache, v_new.astype(v_cache.dtype), idx)
+    from repro.kernels import ops  # local import to avoid cycles
+
+    out = shard(
+        ops.verify_attention(q, k_cache, v_cache, idx + t, impl=impl), "bthd"
+    )
+    mask = head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "btd")
+    return y, (k_cache, v_cache)
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

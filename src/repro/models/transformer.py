@@ -375,6 +375,107 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# Chunk-verify decode (speculative decoding target pass)
+# ---------------------------------------------------------------------------
+
+
+def recurrent_state_batch_axis(cfg: ModelConfig) -> int:
+    """Batch-axis position inside the *recurrent* per-layer state pytree
+    (``chunk_states`` leaves carry one extra leading step axis on top)."""
+    return 2 if cfg.family == "hybrid" else 1
+
+
+def chunk_recurrent_states(cfg: ModelConfig, layers: Params) -> Optional[Params]:
+    """The rollback-relevant slice of a cache's ``layers`` pytree: SSM/conv
+    state for recurrent families, ``None`` for pure-KV families (their
+    rollback is an index rewind — stale entries are overwritten before ever
+    being read, DESIGN.md §4)."""
+    if cfg.family == "ssm":
+        return layers
+    if cfg.family == "hybrid":
+        return layers["mamba"]
+    return None
+
+
+def merge_recurrent_states(cfg: ModelConfig, layers: Params, states) -> Params:
+    """Inverse of ``chunk_recurrent_states``: graft rolled-back recurrent
+    state back into a cache's ``layers`` pytree."""
+    if cfg.family == "ssm":
+        return states
+    if cfg.family == "hybrid":
+        return dict(layers, mamba=states)
+    return layers
+
+
+def decode_chunk(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    cache: Params,
+    *,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+) -> tuple[jax.Array, Params, Optional[Params]]:
+    """Score a T = gamma+1 speculative chunk in ONE fused pass.
+
+    tokens: [B, T] int32 — current token + gamma draft tokens per slot.
+    Returns ``(logits [B, T, V], cache, chunk_states)`` with the cache index
+    advanced by T and the chunk's K/V (or SSM state) consumed.
+
+    Attention families score all T positions in parallel through
+    ``attention_verify`` (the chunk-verify kernel path) — no sequential
+    scan, so the pass costs one cache sweep instead of T.  Recurrent
+    families (ssm/hybrid) cannot parallelize the state recurrence; they run
+    a ``lax.scan`` of ``decode_step`` *inside the same jitted program* and
+    additionally return ``chunk_states``: the recurrent per-layer state
+    stacked after each chunk step (leading axis T), which acceptance uses to
+    rewind a slot's SSM/conv state past rejected tokens
+    (``spec.rollback.select_step_state``).  Pure-KV families return ``None``
+    there — rewinding ``index`` alone is a complete rollback for them."""
+    b, t = tokens.shape
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        x = params["embed"].astype(compute_dtype)[tokens]  # [B, T, d]
+        idx = cache["index"]
+        cast = lambda tr: jax.tree.map(
+            lambda a: a.astype(compute_dtype)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, tr)
+
+        def body(xc, per_layer):
+            lp, k_c, v_c = per_layer
+            h = L.norm(cfg, xc, lp.get("ln1"))
+            y, (k_c, v_c) = L.attention_verify(
+                cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
+            )
+            xc = xc + y
+            h = L.norm(cfg, xc, lp.get("ln2"))
+            if cfg.family == "moe":
+                y2, _, _ = MOE.moe_block(cfg, lp["ffn"], h)
+            else:
+                y2 = L.mlp_block(lp["ffn"], h)
+            return xc + y2, (k_c, v_c)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x,
+            (cast(params["layers"]), cache["layers"]["k"], cache["layers"]["v"]),
+        )
+        x = L.norm(cfg, x, params.get("final_norm"))
+        logits = shard(unembed(cfg, params, x), "btv")
+        new_cache = {"index": idx + t, "layers": {"k": k_new, "v": v_new}}
+        return logits, new_cache, None
+
+    # Recurrent families: fused sequential scan with per-step state capture.
+    def step(c, tok_t):
+        logits_t, c = decode_step(
+            cfg, params, tok_t, c, compute_dtype=compute_dtype,
+            attn_impl=attn_impl,
+        )
+        return c, (logits_t, chunk_recurrent_states(cfg, c["layers"]))
+
+    cache, (logits_seq, states_seq) = jax.lax.scan(step, cache, tokens.T)
+    return logits_seq.transpose(1, 0, 2), cache, states_seq
+
+
+# ---------------------------------------------------------------------------
 # Fused decode loop (sync-free serving fast path)
 # ---------------------------------------------------------------------------
 

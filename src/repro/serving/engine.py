@@ -14,16 +14,26 @@ Fast path (DESIGN.md §3):
 
 * ``decode_loop(k)`` fuses k microsteps into one jitted ``lax.scan`` with
   per-slot active/done masking and donated cache buffers — exactly ONE
-  device->host transfer per loop, vs ``1 + num_active`` for the legacy
+  device->host transfer per loop, vs the per-step transfer of the legacy
   ``decode_microstep`` (kept for comparison and single-step callers).
 * Prefill pads prompts to power-of-two length buckets, so 20 distinct prompt
   lengths compile a handful of programs instead of 20, and
   ``prefill_into_slot`` writes K/V straight into the batch cache on device
   (no host-side cache splice).
 
+Speculative fast path (DESIGN.md §4): constructing the engine with a
+``draft_cfg``/``draft_params`` pairing (``configs.base.draft_config``)
+enables ``spec_decode_loop(k, gamma)`` — k fused draft-propose /
+chunk-verify rounds that emit up to ``gamma + 1`` *verified* tokens per slot
+per round under the same one-transfer-per-loop discipline.
+
 Timebase: all request timestamps come from ONE clock chosen at construction
 (``clock=``, default ``time.monotonic``).  Collocated runtimes rebind it to
-their virtual clock so latencies never mix timebases.
+their virtual clock so latencies never mix timebases.  Offline requests
+added with the default ``arrival_time == 0.0`` are stamped from the engine
+clock at admission, so latency metrics never mix an epoch-zero arrival with
+a monotonic/virtual now (online requests keep their explicit arrivals —
+including a genuine virtual ``t == 0`` — so queueing delay is preserved).
 """
 from __future__ import annotations
 
@@ -37,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, SpecDecodeConfig
 from repro.models import transformer as T
 
 _req_counter = itertools.count()
@@ -73,6 +83,10 @@ class InferenceEngine:
         prefill_impl: str = "xla",
         clock: Optional[Callable[[], float]] = None,
         min_prefill_bucket: int = 8,
+        draft_cfg: Optional[ModelConfig] = None,
+        draft_params: Any = None,
+        spec: Optional[SpecDecodeConfig] = None,
+        spec_seed: int = 0,
     ):
         self.cfg = cfg
         self.max_slots = max_slots
@@ -91,6 +105,10 @@ class InferenceEngine:
         self.d2h_transfers = 0  # device->host syncs issued by engine code
         self.generated_tokens_total = 0
         self.prefill_bucket_lengths: set[int] = set()
+        # speculative-decoding counters (spec_acceptance_rate reads these)
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
         self._decode = jax.jit(
             functools.partial(
@@ -113,6 +131,54 @@ class InferenceEngine:
             ),
             donate_argnames=("cache",),
         )
+
+        # --- speculative decoding (draft/target pairing) ---------------
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_cache = None
+        self.spec_cfg = spec or SpecDecodeConfig()
+        if self.spec_enabled:
+            assert draft_cfg is not None, "draft_params without draft_cfg"
+            assert draft_cfg.vocab_size == cfg.vocab_size, (
+                "draft and target must share a vocabulary"
+            )
+            dcache = T.init_cache(draft_cfg, max_slots, max_seq, compute_dtype)
+            dcache["index"] = jnp.zeros((max_slots,), jnp.int32)
+            self.draft_cache = dcache
+            self._spec_key = jax.random.PRNGKey(spec_seed)
+            from repro.spec.loop import spec_decode_loop as _spec_fn
+
+            self._spec_loop = jax.jit(
+                functools.partial(
+                    _spec_fn, cfg, draft_cfg, mode=self.spec_cfg.mode,
+                    max_seq=max_seq, sim_accept_p=self.spec_cfg.sim_accept_p,
+                    compute_dtype=compute_dtype, attn_impl=decode_impl,
+                ),
+                static_argnames=("k", "gamma"),
+                donate_argnames=(
+                    "tokens", "cache", "draft_cache", "remaining", "key"
+                ),
+            )
+            self._draft_prefill = jax.jit(
+                functools.partial(
+                    T.prefill_into_slot, draft_cfg, max_seq=max_seq,
+                    impl=prefill_impl, compute_dtype=compute_dtype,
+                ),
+                donate_argnames=("cache",),
+            )
+
+    # ------------------------------------------------------------------
+    @property
+    def spec_enabled(self) -> bool:
+        return self.draft_params is not None
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Observed draft-token acceptance across all spec rounds (pre
+        budget-clamp: measures draft quality, not budget truncation)."""
+        if self.spec_drafted == 0:
+            return float("nan")
+        return self.spec_accepted / self.spec_drafted
 
     # ------------------------------------------------------------------
     def free_slots(self) -> list[int]:
@@ -147,20 +213,37 @@ class InferenceEngine:
                 f"prompt of {n} tokens exceeds engine max_seq={self.max_seq}; "
                 "refusing to truncate silently"
             )
+        if req.arrival_time == 0.0 and not req.online:
+            # default epoch-zero arrival on an offline request: stamp from
+            # the engine clock so latency metrics never mix timebases.
+            # Online requests keep an explicit 0.0 — on a virtual clock that
+            # is a real arrival instant, and restamping it at admission
+            # would erase the request's queueing delay.
+            req.arrival_time = self.clock()
         sb = self._bucket_len(n)
         prompt = np.zeros((1, sb), np.int32)
         prompt[0, :n] = np.asarray(req.prompt, np.int32)
-        if self.cfg.embed_inputs:
-            # stub frontend: embed prompt tokens through the output table
-            prompt_in = self.params["embed"][jnp.asarray(prompt)].astype(
-                self.compute_dtype
-            )
-        else:
-            prompt_in = jnp.asarray(prompt)
+
+        def embed_or_pass(params):
+            if self.cfg.embed_inputs:
+                # stub frontend: embed prompt tokens through the output table
+                return params["embed"][jnp.asarray(prompt)].astype(
+                    self.compute_dtype
+                )
+            return jnp.asarray(prompt)
+
         self.prefill_bucket_lengths.add(sb)
         tok, self.cache = self._prefill_slot(
-            self.params, prompt_in, jnp.int32(n), jnp.int32(slot), self.cache
+            self.params, embed_or_pass(self.params), jnp.int32(n),
+            jnp.int32(slot), self.cache,
         )
+        if self.spec_enabled:
+            # draft cache tracks the same prefix; its first-token output is
+            # never fetched (no extra device->host transfer)
+            _, self.draft_cache = self._draft_prefill(
+                self.draft_params, embed_or_pass(self.draft_params),
+                jnp.int32(n), jnp.int32(slot), self.draft_cache,
+            )
         req.generated.append(int(tok))
         self.d2h_transfers += 1
         self.generated_tokens_total += 1
@@ -211,13 +294,68 @@ class InferenceEngine:
         return finished
 
     # ------------------------------------------------------------------
+    def spec_decode_loop(self, k: int, gamma: int) -> list[Request]:
+        """Run ``k`` fused speculative rounds (draft-propose + chunk-verify);
+        returns requests that finished.  One device->host transfer total.
+
+        Each round spends one schedulable quantum and emits up to
+        ``gamma + 1`` *verified* tokens per slot (greedy mode: byte-identical
+        to the plain greedy ``decode_loop`` stream).  Pick ``k`` from
+        ``DECODE_K_BUCKETS`` and ``gamma`` from the pairing's gamma buckets
+        to bound the number of compiled programs.  A slot needs room for a
+        whole chunk, so it retires once ``index + gamma >= max_seq`` —
+        slightly earlier than the plain loop's ``max_seq - 1`` horizon."""
+        assert self.spec_enabled, "engine built without a draft pairing"
+        if self.num_active == 0 or k <= 0:
+            return []
+        remaining = np.zeros((self.max_slots,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
+        (
+            self.tokens, self.cache, self.draft_cache, rem, self._spec_key,
+            out_toks, n_out, accepted, proposed,
+        ) = self._spec_loop(
+            self.params, self.draft_params, self.tokens, self.cache,
+            self.draft_cache, jnp.asarray(remaining), self._spec_key,
+            k=k, gamma=gamma,
+        )
+        toks_np, n_np, acc_np, prop_np, rem_np, idx_np = jax.device_get(
+            (out_toks, n_out, accepted, proposed, rem, self.cache["index"])
+        )
+        self.d2h_transfers += 1  # the single fused fetch above
+        self.steps_executed += k
+        self.spec_rounds += k
+        now = self.clock()
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            for j in range(k):
+                n = int(n_np[j, i])
+                req.generated.extend(int(t) for t in toks_np[j, i, :n])
+                self.generated_tokens_total += n
+            self.spec_accepted += int(acc_np[:, i].sum())
+            self.spec_drafted += int(prop_np[:, i].sum())
+            if rem_np[i] == 0 or idx_np[i] + gamma >= self.max_seq:
+                req.finish_time = now
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["index"] = self.cache["index"].at[i].set(0)
+                self.draft_cache["index"] = (
+                    self.draft_cache["index"].at[i].set(0)
+                )
+        return finished
+
+    # ------------------------------------------------------------------
     def decode_microstep(self) -> list[Request]:
         """One decode step over all slots; returns requests that finished.
 
-        Legacy single-step path: syncs to host every step (1 transfer for the
-        token batch + 1 per active slot for the finish check).  Kept for
-        single-step callers and as the benchmark baseline — the fast path is
-        ``decode_loop``."""
+        Legacy single-step path: syncs to host every step, but the token
+        batch and the per-slot finish-check indices come down in ONE batched
+        transfer (the old code paid 1 + num_active transfers per step).
+        Kept for single-step callers and as the benchmark baseline — the
+        fast path is ``decode_loop``."""
         if self.num_active == 0:
             return []
         logits, self.cache = self._decode(self.params, self.tokens, self.cache)
@@ -225,19 +363,19 @@ class InferenceEngine:
         self.tokens = next_tokens
         self.steps_executed += 1
         finished = []
-        host_tokens = np.asarray(next_tokens)
-        self.d2h_transfers += 1
+        host_tokens, idx_np = jax.device_get(
+            (next_tokens, self.cache["index"])
+        )
+        self.d2h_transfers += 1  # tokens + finish-check indices, batched
         now = self.clock()
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             req.generated.append(int(host_tokens[i]))
             self.generated_tokens_total += 1
-            index_i = int(self.cache["index"][i])
-            self.d2h_transfers += 1  # per-slot finish-check sync
-            if len(req.generated) >= req.max_new_tokens or index_i >= (
-                self.max_seq - 1
-            ):
+            if len(req.generated) >= req.max_new_tokens or int(
+                idx_np[i]
+            ) >= (self.max_seq - 1):
                 req.finish_time = now
                 finished.append(req)
                 self.slots[i] = None

@@ -1,0 +1,33 @@
+"""Speculative decoding subsystem: draft-propose / target-verify.
+
+SpecInF's namesake filling becomes *speculative* end to end: a cheap draft
+model proposes ``gamma`` tokens per slot, the target model scores all
+``gamma + 1`` chunk positions in ONE fused chunk-verify pass
+(``kernels/verify_attention.py`` on the attention hot path), and acceptance
+logic keeps the longest target-consistent prefix, rolling each slot's cache
+index (and SSM/conv state) back past rejected tokens.  Every accepted round
+turns one schedulable quantum into up to ``gamma + 1`` verified tokens
+without lengthening the quantum itself — more tokens per bubble grant
+(DESIGN.md §4).
+
+Modules:
+  * ``draft``      -- draft-model proposer (greedy / seeded-sampling)
+  * ``verify``     -- acceptance rules: greedy, sampled (residual), simulated
+  * ``rollback``   -- per-slot cache/state rewind past rejected tokens
+  * ``loop``       -- the fused k-round ``spec_decode_loop`` (lax.scan)
+  * ``controller`` -- adaptive gamma from Algorithm-1 phase + acceptance
+"""
+from repro.spec.controller import GAMMA_BUCKETS, AdaptiveGammaController
+from repro.spec.draft import draft_propose
+from repro.spec.loop import spec_decode_loop
+from repro.spec.verify import greedy_accept, sampled_accept, simulated_accept
+
+__all__ = [
+    "GAMMA_BUCKETS",
+    "AdaptiveGammaController",
+    "draft_propose",
+    "spec_decode_loop",
+    "greedy_accept",
+    "sampled_accept",
+    "simulated_accept",
+]

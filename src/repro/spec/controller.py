@@ -1,0 +1,79 @@
+"""Adaptive draft-length (gamma) control.
+
+Algorithm 1 decides *when* inference may run and how many tokens a bubble
+grant is worth; this controller decides *how speculative* each granted
+round should be.  Two signals:
+
+* **Phase** gates the risk appetite.  A conservative-phase grant means
+  training activity is imminent, so the round must stay short (smallest
+  gamma — the quantum must stay preemptible).  Incremental allows mid
+  buckets; stable opens the full range.
+* **Observed acceptance** (EWMA over verify outcomes) picks the bucket that
+  maximizes expected verified tokens per unit cost: a round at draft length
+  g yields ``E[tokens] = (1 - p^(g+1)) / (1 - p)`` for acceptance rate p and
+  costs ``1 + (g+1) * draft_cost_ratio`` target-step equivalents (one chunk
+  verify + g+1 cheap draft steps).  Low acceptance collapses gamma toward 1
+  (drafting is wasted work); high acceptance grows it.
+
+Gamma is drawn from ``GAMMA_BUCKETS`` so the engine compiles a bounded set
+of fused loop programs, exactly like ``DECODE_K_BUCKETS`` (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+#: Draft-length compile buckets (chunk = gamma + 1 target positions).
+GAMMA_BUCKETS = (1, 2, 4)
+
+
+class AdaptiveGammaController:
+    def __init__(
+        self,
+        buckets: tuple[int, ...] = GAMMA_BUCKETS,
+        *,
+        ewma: float = 0.5,
+        draft_cost_ratio: float = 0.25,
+        init_acceptance: float = 0.7,
+    ):
+        assert buckets == tuple(sorted(buckets)) and buckets[0] >= 1
+        assert 0.0 < ewma <= 1.0
+        self.buckets = tuple(buckets)
+        self.ewma = ewma
+        self.draft_cost_ratio = draft_cost_ratio
+        self.acceptance = init_acceptance
+
+    # ------------------------------------------------------------------
+    def observe(self, accepted: int, proposed: int) -> None:
+        """Fold one loop's verify outcome into the acceptance EWMA."""
+        if proposed > 0:
+            rate = accepted / proposed
+            self.acceptance += self.ewma * (rate - self.acceptance)
+
+    # ------------------------------------------------------------------
+    def expected_tokens_per_round(self, gamma: int) -> float:
+        """E[verified tokens] for one round at the current acceptance."""
+        p = min(max(self.acceptance, 0.0), 0.99)
+        if p == 0.0:
+            return 1.0
+        return (1.0 - p ** (gamma + 1)) / (1.0 - p)
+
+    def round_cost_steps(self, gamma: int) -> float:
+        """Round cost in target-step equivalents (chunk verify + drafts)."""
+        return 1.0 + (gamma + 1) * self.draft_cost_ratio
+
+    # ------------------------------------------------------------------
+    def gamma_for(self, phase) -> int:
+        """Draft length for the next fused loop: phase-gated efficiency
+        argmax over the buckets.  ``phase`` is a ``core.scheduler.Phase``
+        (accepted duck-typed via ``.value`` to keep this module free of a
+        core import — ``core.filling`` imports us)."""
+        name = getattr(phase, "value", phase)
+        if name == "conservative":
+            allowed = self.buckets[:1]
+        elif name == "incremental":
+            allowed = self.buckets[: max(1, (len(self.buckets) + 1) // 2)]
+        else:
+            allowed = self.buckets
+        return max(
+            allowed,
+            key=lambda g: self.expected_tokens_per_round(g)
+            / self.round_cost_steps(g),
+        )

@@ -1,0 +1,79 @@
+"""Draft-model proposer: ``gamma`` speculative tokens per slot.
+
+The draft runs ``gamma + 1`` single-token decode steps inside one
+``lax.scan``: steps ``0..gamma-1`` produce the draft tokens, and the final
+*catch-up* step consumes the last draft token so that a fully-accepted chunk
+leaves the draft cache one-token-aligned with the target (both rewind to
+``index + accepted + 1`` — see ``spec.loop``).  The draft is cheap by
+construction (``configs.base.draft_config``), so the extra step costs far
+less than the host round-trip it avoids.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def draft_propose(
+    cfg: ModelConfig,
+    params,
+    token: jax.Array,
+    cache,
+    *,
+    gamma: int,
+    mode: str = "greedy",
+    key: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+) -> tuple[jax.Array, Optional[jax.Array], dict, Optional[dict]]:
+    """Propose ``gamma`` draft tokens per slot from ``token`` [B] int32.
+
+    ``mode``:
+      * "greedy" -- argmax chain (deterministic; used for greedy and
+                    simulated-acceptance speculative decoding)
+      * "sample" -- seeded categorical sampling; returns the full per-step
+                    draft distributions for the residual acceptance test
+
+    Returns ``(draft_tokens [B, gamma], draft_probs [B, gamma, V] | None,
+    cache, step_states)``.  ``step_states`` stacks the recurrent per-layer
+    state after each of the ``gamma + 1`` steps (leading step axis) for
+    SSM/conv rollback; ``None`` for pure-KV drafts, whose rollback is an
+    index rewind.  The cache index advances by ``gamma + 1`` — callers
+    overwrite it with the post-acceptance index.
+    """
+    assert mode in ("greedy", "sample"), mode
+    if mode == "sample":
+        assert key is not None, "seeded-sampling draft needs a PRNG key"
+        keys = jax.random.split(key, gamma + 1)
+    else:
+        keys = jnp.zeros((gamma + 1, 2), jnp.uint32)
+
+    def step(carry, key_t):
+        tok, c = carry
+        logits, c = T.decode_step(
+            cfg, params, tok, c, compute_dtype=compute_dtype,
+            attn_impl=attn_impl,
+        )
+        logits32 = logits.astype(jnp.float32)
+        if mode == "sample":
+            nxt = jax.random.categorical(key_t, logits32, axis=-1).astype(
+                jnp.int32
+            )
+            probs = jax.nn.softmax(logits32, axis=-1)
+        else:
+            nxt = jnp.argmax(logits32, axis=-1).astype(jnp.int32)
+            probs = None
+        states = T.chunk_recurrent_states(cfg, c["layers"])
+        return (nxt, c), (nxt, probs, states)
+
+    (_, cache), (toks, probs, states) = jax.lax.scan(
+        step, (token, cache), keys
+    )
+    draft_tokens = toks[:gamma].T  # [B, gamma]; the catch-up token is dropped
+    draft_probs = None if probs is None else probs[:gamma].transpose(1, 0, 2)
+    return draft_tokens, draft_probs, cache, states

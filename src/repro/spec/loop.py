@@ -1,0 +1,150 @@
+"""The fused speculative decode loop: k propose/verify/accept rounds
+entirely on-device via ``lax.scan`` — the speculative analog of
+``transformer.decode_loop`` with the same host discipline: the caller
+fetches everything it needs with ONE device->host transfer per loop.
+
+Round anatomy (all per-slot, ragged over the batch):
+
+  1. draft proposes ``gamma`` tokens (+1 catch-up step, ``spec.draft``)
+  2. target scores the ``gamma+1`` chunk in one fused pass
+     (``transformer.decode_chunk`` -> chunk-verify kernel)
+  3. acceptance keeps the longest admissible prefix (``spec.verify``)
+  4. both caches rewind to ``index + accepted + 1``; recurrent state is
+     selected from the captured per-step stack (``spec.rollback``)
+
+Freeze masking mirrors ``decode_loop``: a slot is active while its budget
+holds and its cache can still fit a whole chunk
+(``index + gamma < max_seq``); frozen slots keep token, index, budget, and
+recurrent state in place.  A frozen slot's KV region may still receive
+(ignored) chunk writes — harmless under the stale-overwrite invariant, and
+slots frozen at the sequence boundary are retired by the engine right after
+the loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.spec.draft import draft_propose
+from repro.spec.rollback import rollback_recurrent
+from repro.spec.verify import greedy_accept, sampled_accept, simulated_accept
+
+
+def spec_round(
+    cfg: ModelConfig,
+    draft_cfg: ModelConfig,
+    params,
+    draft_params,
+    carry,
+    *,
+    gamma: int,
+    mode: str,
+    max_seq: int,
+    sim_accept_p: float,
+    compute_dtype,
+    attn_impl: str,
+):
+    """One propose/verify/accept round.  carry = (tokens, cache,
+    draft_cache, remaining, key); emits (out_tokens [B, gamma+1],
+    n_out [B], accepted [B], proposed [B])."""
+    tokens, cache, dcache, rem, key = carry
+    key, k_draft, k_acc = jax.random.split(key, 3)
+    idx0 = cache["index"]
+    active = (rem > 0) & (idx0 + gamma < max_seq)
+    old_t = T.chunk_recurrent_states(cfg, cache["layers"])
+    old_d = T.chunk_recurrent_states(draft_cfg, dcache["layers"])
+
+    d_toks, d_probs, dcache, d_states = draft_propose(
+        draft_cfg, draft_params, tokens, dcache, gamma=gamma,
+        mode="sample" if mode == "sample" else "greedy", key=k_draft,
+        compute_dtype=compute_dtype, attn_impl=attn_impl,
+    )
+    chunk = jnp.concatenate([tokens[:, None], d_toks], axis=1)  # [B, g+1]
+    logits, cache, t_states = T.decode_chunk(
+        cfg, params, chunk, cache, compute_dtype=compute_dtype,
+        attn_impl=attn_impl,
+    )
+    if mode == "greedy":
+        a, nxt, out, a_match = greedy_accept(d_toks, logits, rem)
+    elif mode == "simulated":
+        a, nxt, out, a_match = simulated_accept(
+            k_acc, sim_accept_p, d_toks, logits, rem
+        )
+    elif mode == "sample":
+        a, nxt, out, a_match = sampled_accept(
+            k_acc, d_toks, d_probs, logits, rem
+        )
+    else:
+        raise ValueError(f"unknown speculative mode {mode!r}")
+
+    n_out = jnp.where(active, a + 1, 0)
+    new_idx = jnp.where(active, idx0 + a + 1, idx0)
+    tokens = jnp.where(active, nxt, tokens)
+    cache = {
+        "index": new_idx,
+        "layers": T.merge_recurrent_states(
+            cfg, cache["layers"],
+            rollback_recurrent(cfg, t_states, a, active, old_t),
+        ),
+    }
+    dcache = {
+        "index": new_idx,
+        "layers": T.merge_recurrent_states(
+            draft_cfg, dcache["layers"],
+            rollback_recurrent(draft_cfg, d_states, a, active, old_d),
+        ),
+    }
+    rem = rem - n_out
+    out = jnp.where(active[:, None], out, 0)
+    # acceptance stats use the unclamped run: a budget cut is not a draft
+    # rejection, so it must not depress the gamma controller's EWMA
+    accepted = jnp.where(active, a_match, 0)
+    proposed = jnp.where(active, gamma, 0)
+    return (tokens, cache, dcache, rem, key), (out, n_out, accepted, proposed)
+
+
+def spec_decode_loop(
+    cfg: ModelConfig,
+    draft_cfg: ModelConfig,
+    params,
+    draft_params,
+    tokens: jax.Array,
+    cache,
+    draft_cache,
+    remaining: jax.Array,
+    key: jax.Array,
+    *,
+    k: int,
+    gamma: int,
+    mode: str = "greedy",
+    max_seq: int,
+    sim_accept_p: float = 0.9,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+):
+    """Run ``k`` speculative rounds on-device.
+
+    Returns ``(tokens, cache, draft_cache, remaining, key, out_tokens
+    [k, B, gamma+1], n_out [k, B], accepted [k, B], proposed [k, B])``;
+    round j emitted ``n_out[j, i]`` verified tokens ``out_tokens[j, i, :n]``
+    for slot i.  Callers bucket ``k`` (``DECODE_K_BUCKETS``) and ``gamma``
+    (``GAMMA_BUCKETS``) so the set of compiled programs stays bounded."""
+
+    def body(carry, _):
+        return spec_round(
+            cfg, draft_cfg, params, draft_params, carry, gamma=gamma,
+            mode=mode, max_seq=max_seq, sim_accept_p=sim_accept_p,
+            compute_dtype=compute_dtype, attn_impl=attn_impl,
+        )
+
+    carry = (tokens, cache, draft_cache, remaining, key)
+    (tokens, cache, draft_cache, remaining, key), ys = jax.lax.scan(
+        body, carry, None, length=k
+    )
+    out_tokens, n_out, accepted, proposed = ys
+    return (
+        tokens, cache, draft_cache, remaining, key,
+        out_tokens, n_out, accepted, proposed,
+    )

@@ -1,0 +1,65 @@
+"""Per-slot cache rewind past rejected draft tokens.
+
+Two rollback regimes (DESIGN.md §4):
+
+* **KV caches** need only the index rewind the loop already performs: a
+  rejected position's K/V entry sits at ``pos >= index`` after the rewind
+  and is rewritten before it is ever attended to — the same stale-overwrite
+  invariant bucket-padded prefill relies on.  No data movement.
+* **Recurrent state** (SSM ``h``/conv tails, Mamba2 state) is *consumed* by
+  every step, so the chunk pass captures the state after each step (leading
+  step axis) and acceptance selects, per slot, the state after exactly
+  ``accepted + 1`` consumed tokens.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def select_step_state(
+    stacked: jax.Array, sel: jax.Array, batch_axis: int
+) -> jax.Array:
+    """Per-slot gather along the leading step axis.
+
+    stacked: [steps, ...] with the batch dimension at ``batch_axis``
+    (counting the step axis); sel: [B] int32 step index per slot.  Returns
+    the selected state with the step axis removed (batch lands at
+    ``batch_axis - 1``)."""
+    lb = jnp.moveaxis(stacked, batch_axis, 0)  # [B, steps, ...]
+    out = jax.vmap(lambda leaf, s: leaf[s])(lb, sel)  # [B, ...]
+    return jnp.moveaxis(out, 0, batch_axis - 1)
+
+
+def rollback_recurrent(
+    cfg: ModelConfig,
+    step_states: Optional[dict],
+    sel: jax.Array,
+    active: jax.Array,
+    old_states: Optional[dict],
+) -> Optional[dict]:
+    """Select each active slot's post-acceptance recurrent state; frozen
+    slots keep their pre-round state untouched.
+
+    step_states: per-step stacked recurrent pytree from ``decode_chunk`` /
+    ``draft_propose`` (``None`` for pure-KV families -> returns
+    ``old_states``, i.e. nothing to do); sel: [B] accepted counts (state
+    after ``sel + 1`` consumed tokens is at step index ``sel``); active: [B]
+    bool round-participation mask; old_states: the pre-round recurrent
+    pytree used for frozen slots."""
+    if step_states is None:
+        return old_states
+    ba = T.recurrent_state_batch_axis(cfg) + 1  # +1 for the step axis
+
+    def pick(stacked, old):
+        picked = select_step_state(stacked, sel, ba)
+        shape = [1] * picked.ndim
+        shape[ba - 1] = picked.shape[ba - 1]
+        return jnp.where(active.reshape(shape), picked, old)
+
+    return jax.tree.map(pick, step_states, old_states)

@@ -1,0 +1,126 @@
+"""Acceptance rules for the target chunk-verify pass.
+
+Each rule consumes the target logits over the ``T = gamma + 1`` chunk
+positions (current token + gamma drafts) and returns, per slot:
+
+  * ``a``       -- accepted draft count, already clamped so the round emits
+                   at most ``remaining`` tokens (``a + 1 <= remaining``)
+  * ``nxt``     -- the next current token (target-sourced: the correction at
+                   the first rejection, or the bonus when all drafts pass)
+  * ``out``     -- the emitted token row [B, gamma+1]; entries past ``a``
+                   are 0 and the caller reads only ``a + 1`` of them
+  * ``a_match`` -- the *unclamped* accepted run, the draft-quality signal:
+                   acceptance-rate stats use this so a budget cut is never
+                   misread as a draft rejection (which would bias the gamma
+                   controller toward short drafts on short-request loads)
+
+Rules:
+  * ``greedy_accept``    -- draft token j accepted iff it equals the target
+    argmax at chunk position j.  Emitted tokens are then *exactly* the plain
+    greedy chain (the equivalence the property test pins down).
+  * ``sampled_accept``   -- the standard speculative-sampling ratio test
+    ``u < p_target/p_draft`` with residual resampling on rejection; exactly
+    the target distribution in expectation, seeded for reproducibility.
+  * ``simulated_accept`` -- benchmark-only: the match outcome is drawn from
+    a Bernoulli(p) stream instead of comparing tokens, so CPU CI can measure
+    the speculative loop's *cost profile* at a chosen acceptance rate
+    without an actually-aligned draft model.  Token content is unfaithful;
+    timing, rollback, and accounting are the real code paths.
+
+The budget clamp preserves stream fidelity: when ``remaining`` truncates an
+accepted run, the final emitted token is the already-accepted draft token at
+the cut (greedy: identical to the target argmax there; sampled: the token
+the ratio test already admitted), never a fresh rejection sample.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _leading_run(match: jax.Array) -> jax.Array:
+    """[B, g] bool -> [B] int32 length of the leading all-True run."""
+    return jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+
+
+def _emit(draft_tokens: jax.Array, a: jax.Array, nxt: jax.Array) -> jax.Array:
+    """Row [B, g+1]: accepted drafts then the target-sourced next token."""
+    g = draft_tokens.shape[1]
+    jpos = jnp.arange(g + 1)[None, :]
+    d_pad = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    return jnp.where(
+        jpos < a[:, None], d_pad,
+        jnp.where(jpos == a[:, None], nxt[:, None], 0),
+    )
+
+
+def _clamp(a_match: jax.Array, remaining: jax.Array, g: int) -> jax.Array:
+    return jnp.clip(jnp.minimum(a_match, remaining - 1), 0, g)
+
+
+def greedy_accept(
+    draft_tokens: jax.Array,  # [B, g] int32
+    target_logits: jax.Array,  # [B, g+1, V]
+    remaining: jax.Array,  # [B] int32 token budgets
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    g = draft_tokens.shape[1]
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, g+1]
+    a_match = _leading_run(draft_tokens == tgt[:, :g])
+    a = _clamp(a_match, remaining, g)
+    # tgt[a] is correct for every exit: at a rejection it is the correction,
+    # when all drafts pass it is the bonus token, and at a budget cut it
+    # equals the accepted draft token (which matched the argmax).
+    nxt = jnp.take_along_axis(tgt, a[:, None], axis=1)[:, 0]
+    return a, nxt, _emit(draft_tokens, a, nxt), a_match
+
+
+def simulated_accept(
+    key: jax.Array,
+    accept_p: float,
+    draft_tokens: jax.Array,
+    target_logits: jax.Array,
+    remaining: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    g = draft_tokens.shape[1]
+    match = jax.random.uniform(key, draft_tokens.shape) < accept_p
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+    a_match = _leading_run(match)
+    a = _clamp(a_match, remaining, g)
+    nxt = jnp.take_along_axis(tgt, a[:, None], axis=1)[:, 0]
+    return a, nxt, _emit(draft_tokens, a, nxt), a_match
+
+
+def sampled_accept(
+    key: jax.Array,
+    draft_tokens: jax.Array,  # [B, g] int32
+    draft_probs: jax.Array,  # [B, g, V] full draft distributions
+    target_logits: jax.Array,  # [B, g+1, V]
+    remaining: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    b, g = draft_tokens.shape
+    p_t = jax.nn.softmax(target_logits.astype(jnp.float32), axis=-1)
+    sel = draft_tokens[..., None]
+    p_t_d = jnp.take_along_axis(p_t[:, :g], sel, axis=-1)[..., 0]  # [B, g]
+    p_d_d = jnp.take_along_axis(draft_probs, sel, axis=-1)[..., 0]
+    k_u, k_res = jax.random.split(key)
+    u = jax.random.uniform(k_u, (b, g))
+    # accept iff u < p_t/p_d, written multiply-through so p_d == 0 rejects
+    a_match = _leading_run(u * p_d_d < p_t_d)
+    a = _clamp(a_match, remaining, g)
+    # Residual distribution at the cut position a: max(p_t - p_d, 0)
+    # renormalized.  When a == g (all accepted) the padded draft row is zero,
+    # so the residual degenerates to p_t[:, g] — the plain bonus sample.
+    p_t_a = jnp.take_along_axis(p_t, a[:, None, None], axis=1)[:, 0]
+    p_d_pad = jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0)))
+    p_d_a = jnp.take_along_axis(p_d_pad, a[:, None, None], axis=1)[:, 0]
+    res = jnp.maximum(p_t_a - p_d_a, 0.0)
+    res_sum = res.sum(axis=-1, keepdims=True)
+    dist = jnp.where(res_sum > 0, res / jnp.maximum(res_sum, 1e-30), p_t_a)
+    nxt_sampled = jax.random.categorical(
+        k_res, jnp.log(dist + 1e-38), axis=-1
+    ).astype(jnp.int32)
+    # Budget cut: position a was *accepted*, emit that draft token as-is.
+    d_pad = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    d_at_a = jnp.take_along_axis(d_pad, a[:, None], axis=1)[:, 0]
+    nxt = jnp.where(a < a_match, d_at_a, nxt_sampled)
+    return a, nxt, _emit(draft_tokens, a, nxt), a_match

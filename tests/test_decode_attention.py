@@ -221,6 +221,51 @@ def test_bucketed_prefill_exact_for_ssm_state(arch):
         tok_p = jnp.argmax(l_p, -1).astype(jnp.int32)
 
 
+def test_decode_microstep_single_batched_transfer():
+    """The legacy microstep's finish-check indices ride in the same batched
+    device->host transfer as the token batch: exactly 1 sync per step,
+    independent of the number of active slots."""
+    cfg = configs.smoke_config("olmo-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine, _ = _engine_with_requests(
+        cfg, params, [np.arange(3), np.arange(5), np.arange(2)], [9, 9, 9]
+    )
+    before = engine.d2h_transfers
+    engine.decode_microstep()
+    assert engine.d2h_transfers - before == 1
+    assert engine.num_active == 3
+
+
+def test_arrival_time_stamped_from_engine_clock():
+    """Default (epoch-zero) arrivals are stamped from the engine clock at
+    admission; explicit arrival times are preserved — latency metrics never
+    mix an epoch-zero arrival with a monotonic/virtual now."""
+    cfg = configs.smoke_config("olmo-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    now = [123.0]
+    engine = InferenceEngine(
+        cfg, params, max_slots=2, max_seq=32, clock=lambda: now[0]
+    )
+    default_req = Request(prompt=np.arange(3), max_new_tokens=2)
+    explicit_req = Request(prompt=np.arange(3), max_new_tokens=2,
+                           arrival_time=120.5)
+    assert engine.add_request(default_req)
+    assert engine.add_request(explicit_req)
+    assert default_req.arrival_time == 123.0
+    assert explicit_req.arrival_time == 120.5
+    now[0] = 125.0
+    while engine.num_active:
+        engine.decode_loop(2)
+    assert default_req.finish_time - default_req.arrival_time == 2.0
+    assert explicit_req.finish_time - explicit_req.arrival_time == 4.5
+    # an ONLINE epoch-zero arrival is a real instant on a virtual clock:
+    # it must survive admission so queueing delay stays in the latency
+    online_req = Request(prompt=np.arange(3), max_new_tokens=1,
+                         arrival_time=0.0, online=True)
+    assert engine.add_request(online_req)
+    assert online_req.arrival_time == 0.0
+
+
 def test_add_request_rejects_overlong_prompt():
     cfg = configs.smoke_config("olmo-1b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))

@@ -106,6 +106,63 @@ def test_alpha_beta_validation():
         AdaptiveKernelScheduler(SpecInFConfig(alpha=5, beta=2))
 
 
+def test_alpha_equals_beta_boundary():
+    """alpha == beta collapses the incremental band to a single zero-count:
+    Z_c < alpha conservative, Z_c == alpha incremental (busy, LL-capped),
+    Z_c > alpha stable (idle)."""
+    cfg = SpecInFConfig(alpha=3, beta=3)
+    s = AdaptiveKernelScheduler(cfg)
+    assert s.update(2).phase is Phase.CONSERVATIVE
+    d = s.update(3)
+    assert d.phase is Phase.INCREMENTAL and d.status is Status.BUSY
+    assert 0 < d.tokens <= cfg.lower_limit
+    d = s.update(4)
+    assert d.phase is Phase.STABLE and d.status is Status.IDLE
+    # dropping back to the boundary re-enters incremental and re-applies LL
+    for _ in range(10):
+        d = s.update(3)
+    assert d.phase is Phase.INCREMENTAL and d.tokens == cfg.lower_limit
+
+
+@pytest.mark.parametrize("m", [2, 3, 5, 8])
+def test_multi_instance_split_preserves_pool(m):
+    """The per-instance grant is exactly the shared pool divided by the
+    instance count — across both capped phases, for any m."""
+    s1 = AdaptiveKernelScheduler(CFG, num_instances=1)
+    sm = AdaptiveKernelScheduler(CFG, num_instances=m)
+    for zc in [CFG.alpha] * 6 + [CFG.beta + 1] * 8:
+        d1 = s1.update(zc)
+        dm = sm.update(zc)
+        assert dm.tokens == pytest.approx(d1.tokens / m)
+        assert dm.tokens * m <= CFG.upper_limit + 1e-9
+
+
+def test_regrowth_from_token_seed_after_reset():
+    """After a conservative zeroing (via Z_c < alpha or an explicit
+    reset()), growth restarts from token_seed — never from the previous
+    high-water mark, and never pinned at zero (the paper-listing bug the
+    seed deviation fixes)."""
+    expected_ramp = []
+    t = CFG.token_seed
+    while t * CFG.gamma < CFG.upper_limit:
+        t *= CFG.gamma
+        expected_ramp.append(t)
+    expected_ramp.append(CFG.upper_limit)
+
+    s = AdaptiveKernelScheduler(CFG)
+    for _ in range(8):
+        s.update(CFG.beta + 1)  # saturate at UL
+    s.update(0)  # conservative cut
+    ramp = [s.update(CFG.beta + 1).tokens for _ in range(len(expected_ramp))]
+    assert ramp == pytest.approx(expected_ramp)
+
+    s.reset()
+    assert s.last_decision.tokens == 0.0
+    assert s.last_decision.phase is Phase.CONSERVATIVE
+    ramp = [s.update(CFG.beta + 1).tokens for _ in range(len(expected_ramp))]
+    assert ramp == pytest.approx(expected_ramp)
+
+
 # ---------------------------------------------------------------------------
 # Bubble Monitor: sliding-window zero-run statistic
 # ---------------------------------------------------------------------------

@@ -1,0 +1,413 @@
+"""Speculative decoding subsystem validation (DESIGN.md §4).
+
+Four layers, matching the subsystem's structure:
+  * the chunk-verify Pallas kernel (interpret mode on CPU) against a
+    chunk-causal length-masked dense reference, across GQA ratios, ragged
+    lengths, empty slots, and the T=1 degeneration to flash-decode;
+  * ``decode_chunk`` — one fused target pass over gamma+1 positions — against
+    the sequential ``decode_step`` chain (KV and recurrent families);
+  * the engine's fused ``spec_decode_loop``: greedy mode must emit the
+    byte-identical stream as plain greedy ``decode_loop`` with rollback
+    exercised, under the one-transfer-per-loop discipline;
+  * the adaptive gamma controller and the draft/target config pairing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SpecDecodeConfig, draft_config
+from repro.core.scheduler import Phase
+from repro.kernels import ops
+from repro.kernels.verify_attention import verify_attention
+from repro.models import transformer as T
+from repro.serving.engine import InferenceEngine, Request
+from repro.spec.controller import GAMMA_BUCKETS, AdaptiveGammaController
+
+
+# ---------------------------------------------------------------------------
+# Chunk-verify kernel
+# ---------------------------------------------------------------------------
+
+
+def _inputs(b, t, h, kvh, s, hd, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd), dtype)
+    return q, k, v
+
+
+def _ref(q, k, v, lengths):
+    """Chunk-causal length-masked dense verify attention."""
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    reps = h // kvh
+    kk = jnp.repeat(k, reps, axis=2)
+    vv = jnp.repeat(v, reps, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * hd**-0.5
+    kpos = jnp.arange(s)
+    bound = (lengths - t)[:, None] + jnp.arange(t)[None, :]
+    mask = kpos[None, None, :] <= bound[:, :, None]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(lengths[:, None, None, None] > 0, p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32)).astype(
+        q.dtype
+    )
+
+
+@pytest.mark.parametrize(
+    "b,t,h,kvh,s,hd,block_k",
+    [
+        (4, 5, 4, 2, 64, 16, 16),   # GQA 2:1, several kv tiles
+        (2, 3, 4, 4, 128, 32, 128),  # MHA, single tile
+        (3, 2, 8, 2, 96, 16, 32),   # GQA 4:1, ragged tile count
+        (2, 4, 4, 1, 80, 16, 32),   # MQA, non-multiple-of-block length
+        (1, 5, 2, 2, 48, 64, 64),   # block_k > s (clamped)
+    ],
+)
+def test_verify_kernel_matches_reference(b, t, h, kvh, s, hd, block_k):
+    q, k, v = _inputs(b, t, h, kvh, s, hd)
+    # ragged lengths incl. boundary cases: empty, chunk-only, mid, full
+    lengths = jnp.asarray(([0, t, t + s // 3, s] * b)[:b], jnp.int32)
+    out = verify_attention(q, k, v, lengths, block_k=block_k, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_ref(q, k, v, lengths)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_verify_kernel_empty_slot_is_zero():
+    q, k, v = _inputs(2, 3, 4, 2, 32, 16)
+    lengths = jnp.array([0, 9], jnp.int32)
+    out = verify_attention(q, k, v, lengths, block_k=16, interpret=True)
+    assert np.all(np.asarray(out[0]) == 0.0)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_kernel_dtypes(dtype):
+    q, k, v = _inputs(2, 4, 4, 2, 64, 32, dtype=dtype)
+    lengths = jnp.array([7, 64], jnp.int32)
+    out = verify_attention(q, k, v, lengths, block_k=32, interpret=True)
+    assert out.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(_ref(q, k, v, lengths), np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_verify_kernel_empty_window_rows_are_zero():
+    """0 < lengths < T: chunk rows whose causal window is empty must return
+    zeros (not a softmax-of-all-masked mean of V); rows with a window match
+    the reference."""
+    t = 4
+    q, k, v = _inputs(1, t, 4, 2, 32, 16, seed=4)
+    lengths = jnp.array([2], jnp.int32)  # rows t=0,1 have no visible keys
+    out = verify_attention(q, k, v, lengths, block_k=16, interpret=True)
+    assert np.all(np.asarray(out[:, :2]) == 0.0)
+    np.testing.assert_allclose(
+        np.asarray(out[:, 2:]), np.asarray(_ref(q, k, v, lengths)[:, 2:]),
+        rtol=2e-5, atol=2e-5,
+    )
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_verify_kernel_chunk1_degenerates_to_flash_decode():
+    """A T=1 chunk is exactly single-token decode attention."""
+    from repro.kernels.decode_attention import decode_attention
+
+    q, k, v = _inputs(3, 1, 4, 2, 64, 16, seed=2)
+    lengths = jnp.array([1, 11, 64], jnp.int32)
+    out_v = verify_attention(q, k, v, lengths, block_k=32, interpret=True)
+    out_d = decode_attention(q[:, 0], k, v, lengths, block_k=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_v[:, 0]), np.asarray(out_d), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_ops_dispatch_pallas_equals_xla():
+    q, k, v = _inputs(3, 4, 4, 2, 64, 16, seed=3)
+    lengths = jnp.array([0, 13, 64], jnp.int32)
+    out_x = ops.verify_attention(q, k, v, lengths, impl="xla")
+    out_p = ops.verify_attention(q, k, v, lengths, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_x), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode_chunk: one fused pass == sequential decode steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "falcon-mamba-7b"])
+def test_decode_chunk_matches_sequential_steps(arch):
+    cfg = configs.smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab_size)
+    _, cache = T.prefill(cfg, params, prompt, 32, compute_dtype=jnp.float32)
+    cache["index"] = jnp.full((2,), 6, jnp.int32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0, cfg.vocab_size)
+    chunk_logits, chunk_cache, states = T.decode_chunk(
+        cfg, params, toks, jax.tree.map(lambda x: x, cache),
+        compute_dtype=jnp.float32,
+    )
+    seq_logits = []
+    for j in range(4):
+        l, cache = T.decode_step(
+            cfg, params, toks[:, j], cache, compute_dtype=jnp.float32
+        )
+        seq_logits.append(l)
+    np.testing.assert_allclose(
+        np.asarray(chunk_logits), np.asarray(jnp.stack(seq_logits, 1)),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(chunk_cache["index"]), np.asarray(cache["index"])
+    )
+    if cfg.family in ("ssm", "hybrid"):
+        # per-step state capture: last captured state == sequential final
+        assert states is not None
+        last = jax.tree.map(lambda s: s[-1], states)
+        ref = T.chunk_recurrent_states(cfg, cache["layers"])
+        for a, b in zip(jax.tree.leaves(last), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+        assert states is None  # KV rollback is an index rewind
+
+
+# ---------------------------------------------------------------------------
+# Engine: fused speculative loop == plain greedy loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-1.7b", "falcon-mamba-7b", "zamba2-2.7b"]
+)
+def test_spec_engine_equals_plain_greedy(arch):
+    """Greedy speculative decoding is an exact accelerator: same stream as
+    plain greedy, KV *and* SSM/conv rollback exercised (random draft ->
+    near-zero acceptance), one device->host transfer per fused loop."""
+    cfg = configs.smoke_config(arch)
+    dcfg = draft_config(cfg)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dparams = T.init_params(dcfg, jax.random.PRNGKey(7))
+    prompts = [np.arange(4), np.arange(9), np.arange(2)]
+    max_new = [7, 12, 5]  # ragged budgets: slots finish mid-loop
+
+    plain = InferenceEngine(
+        cfg, params, max_slots=3, max_seq=64, compute_dtype=jnp.float32
+    )
+    spec = InferenceEngine(
+        cfg, params, max_slots=3, max_seq=64, compute_dtype=jnp.float32,
+        draft_cfg=dcfg, draft_params=dparams,
+    )
+    rp = [Request(prompt=p, max_new_tokens=m) for p, m in zip(prompts, max_new)]
+    rs = [Request(prompt=p, max_new_tokens=m) for p, m in zip(prompts, max_new)]
+    for r in rp:
+        assert plain.add_request(r)
+    for r in rs:
+        assert spec.add_request(r)
+    while plain.num_active:
+        plain.decode_loop(4)
+    loops = 0
+    while spec.num_active:
+        d2h0 = spec.d2h_transfers
+        spec.spec_decode_loop(2, 2)
+        assert spec.d2h_transfers - d2h0 == 1, "one transfer per fused loop"
+        loops += 1
+        assert loops < 50
+    for a, b in zip(rp, rs):
+        assert b.generated == a.generated, (
+            f"speculative stream diverges for prompt len {len(a.prompt)}"
+        )
+    assert spec.spec_drafted > spec.spec_accepted, "rollback never exercised"
+
+
+def test_spec_loop_noop_without_active_slots():
+    cfg = configs.smoke_config("qwen3-1.7b")
+    dcfg = draft_config(cfg)
+    engine = InferenceEngine(
+        cfg, T.init_params(cfg, jax.random.PRNGKey(0)), max_slots=2,
+        max_seq=32, draft_cfg=dcfg,
+        draft_params=T.init_params(dcfg, jax.random.PRNGKey(1)),
+    )
+    assert engine.spec_decode_loop(4, 2) == []
+    assert engine.d2h_transfers == 0
+
+
+def test_simulated_mode_respects_budgets():
+    """Simulated acceptance (benchmark mode) runs the real loop mechanics:
+    budgets land exactly, acceptance tracks the Bernoulli parameter."""
+    cfg = configs.smoke_config("qwen3-1.7b")
+    dcfg = draft_config(cfg)
+    engine = InferenceEngine(
+        cfg, T.init_params(cfg, jax.random.PRNGKey(0)), max_slots=3,
+        max_seq=256, draft_cfg=dcfg,
+        draft_params=T.init_params(dcfg, jax.random.PRNGKey(1)),
+        spec=SpecDecodeConfig(mode="simulated", sim_accept_p=0.9),
+    )
+    reqs = [
+        Request(prompt=np.arange(3 + i), max_new_tokens=20 + 3 * i)
+        for i in range(3)
+    ]
+    for r in reqs:
+        assert engine.add_request(r)
+    while engine.num_active:
+        engine.spec_decode_loop(4, 4)
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens
+    assert 0.5 < engine.spec_acceptance_rate <= 1.0
+
+
+def test_sample_mode_deterministic_under_seed():
+    cfg = configs.smoke_config("qwen3-1.7b")
+    dcfg = draft_config(cfg)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dparams = T.init_params(dcfg, jax.random.PRNGKey(3))
+    streams = []
+    for _ in range(2):
+        engine = InferenceEngine(
+            cfg, params, max_slots=1, max_seq=64, compute_dtype=jnp.float32,
+            draft_cfg=dcfg, draft_params=dparams,
+            spec=SpecDecodeConfig(mode="sample"), spec_seed=11,
+        )
+        req = Request(prompt=np.arange(5), max_new_tokens=12)
+        assert engine.add_request(req)
+        while engine.num_active:
+            engine.spec_decode_loop(2, 2)
+        assert all(0 <= t < cfg.vocab_size for t in req.generated)
+        assert len(req.generated) == 12
+        streams.append(list(req.generated))
+    assert streams[0] == streams[1]
+
+
+def test_spec_slot_recycling():
+    """A slot freed by the speculative loop accepts a fresh request and both
+    caches (target + draft) are re-prefilled for it."""
+    cfg = configs.smoke_config("qwen3-1.7b")
+    dcfg = draft_config(cfg)
+    engine = InferenceEngine(
+        cfg, T.init_params(cfg, jax.random.PRNGKey(0)), max_slots=1,
+        max_seq=64, draft_cfg=dcfg,
+        draft_params=T.init_params(dcfg, jax.random.PRNGKey(1)),
+    )
+    first = Request(prompt=np.arange(4), max_new_tokens=3)
+    assert engine.add_request(first)
+    while engine.num_active:
+        engine.spec_decode_loop(2, 2)
+    assert len(first.generated) == 3
+    again = Request(prompt=np.arange(6), max_new_tokens=4)
+    assert engine.add_request(again)
+    while engine.num_active:
+        engine.spec_decode_loop(2, 2)
+    assert len(again.generated) == 4
+
+
+# ---------------------------------------------------------------------------
+# Adaptive gamma controller
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_controller_phase_gating():
+    ctrl = AdaptiveGammaController(init_acceptance=0.95)
+    assert ctrl.gamma_for(Phase.CONSERVATIVE) == GAMMA_BUCKETS[0]
+    assert ctrl.gamma_for(Phase.INCREMENTAL) <= ctrl.gamma_for(Phase.STABLE)
+    assert ctrl.gamma_for(Phase.STABLE) == GAMMA_BUCKETS[-1]
+
+
+def test_gamma_controller_tracks_acceptance():
+    ctrl = AdaptiveGammaController(init_acceptance=0.9)
+    high = ctrl.gamma_for(Phase.STABLE)
+    for _ in range(10):
+        ctrl.observe(accepted=0, proposed=8)  # draft is useless
+    low = ctrl.gamma_for(Phase.STABLE)
+    assert ctrl.acceptance < 0.05
+    assert low <= high and low == GAMMA_BUCKETS[0]
+    for _ in range(10):
+        ctrl.observe(accepted=8, proposed=8)
+    assert ctrl.gamma_for(Phase.STABLE) == GAMMA_BUCKETS[-1]
+    assert ctrl.expected_tokens_per_round(4) > ctrl.expected_tokens_per_round(1)
+
+
+def test_gamma_controller_ignores_empty_observations():
+    ctrl = AdaptiveGammaController(init_acceptance=0.7)
+    ctrl.observe(accepted=0, proposed=0)
+    assert ctrl.acceptance == 0.7
+
+
+# ---------------------------------------------------------------------------
+# Draft/target pairing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-1.7b", "olmo-1b", "falcon-mamba-7b", "zamba2-2.7b",
+             "moonshot-v1-16b-a3b"]
+)
+def test_draft_config_structurally_valid(arch):
+    cfg = configs.smoke_config(arch)
+    dcfg = draft_config(cfg)
+    assert dcfg.vocab_size == cfg.vocab_size
+    assert dcfg.family == cfg.family
+    assert dcfg.num_layers <= max(cfg.num_layers, cfg.shared_attn_every or 1)
+    if dcfg.num_heads:
+        assert dcfg.num_heads % dcfg.num_kv_heads == 0
+        assert dcfg.resolved_head_dim == cfg.resolved_head_dim
+    if dcfg.shared_attn_every:
+        assert dcfg.num_layers % dcfg.shared_attn_every == 0
+    if dcfg.ssm_version == 2:
+        assert dcfg.d_inner % dcfg.ssm_head_dim == 0
+    # the draft must actually be cheaper
+    assert dcfg.param_count() < cfg.param_count()
+    # and instantiable
+    T.init_params(dcfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration: grants spent in verified tokens
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_spends_grants_in_verified_tokens():
+    import itertools
+
+    from repro.configs.base import SpecInFConfig
+    from repro.core import SpecInFRuntime
+    from repro.core.profiles import dp_profile
+
+    cfg = configs.smoke_config("olmo-1b")
+    dcfg = draft_config(cfg)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = InferenceEngine(
+        cfg, params, max_slots=2, max_seq=256, draft_cfg=dcfg,
+        draft_params=T.init_params(dcfg, jax.random.PRNGKey(1)),
+        spec=SpecDecodeConfig(mode="simulated", sim_accept_p=0.9),
+    )
+    for _ in range(2):
+        engine.add_request(Request(prompt=np.arange(8), max_new_tokens=1000))
+    rt = SpecInFRuntime(
+        train_step=lambda s, b: (s, {"loss": 0.0}),
+        train_state=None,
+        batch_iter=itertools.repeat({}),
+        profile=dp_profile("tiny", compute_s=0.05, comm_s=0.03),
+        engine=engine,
+        cfg=SpecInFConfig(),
+        decode_microstep_s=0.004,
+    )
+    metrics = rt.run(num_iterations=8)
+    assert metrics.spec_rounds > 0, "bubbles must admit speculative rounds"
+    assert metrics.offline_tokens_generated > 0
+    # speculative rounds multiply tokens per quantum: the verified yield
+    # must exceed one token per round (acceptance 0.9, gamma >= 1)
+    assert (
+        metrics.offline_tokens_generated
+        > metrics.spec_rounds * engine.max_slots * 0.5
+    )
+    assert engine.spec_acceptance_rate > 0.5
+    assert rt.gamma_ctrl.acceptance > 0.5
