@@ -24,8 +24,12 @@ def _time_us(fn, n=50, warmup=3):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def _fresh_engine(cfg, params, max_seq=256):
-    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=max_seq)
+def _fresh_engine(cfg, params, max_seq=256, **kw):
+    # kv_page_size=0 pins the legacy dense layout so the historical
+    # legacy/fused rows keep their meaning across PRs; the paged rows come
+    # from bench_paged_kv's explicit side-by-side.
+    kw.setdefault("kv_page_size", 0)
+    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=max_seq, **kw)
     for _ in range(4):
         engine.add_request(Request(prompt=np.arange(8), max_new_tokens=10**9))
     return engine
@@ -120,8 +124,10 @@ def bench_spec_decode(accept_p=0.9, gamma=4):
 
     plain = _fresh_engine(cfg, params, max_seq=max_seq)
     plain_tps, _ = throughput(plain, lambda: plain.decode_loop(8))
+    # dense-pinned like _fresh_engine: the spec rows' trajectory predates
+    # the paged pool (bench_paged_kv holds the paged-vs-dense comparison)
     eng = InferenceEngine(
-        cfg, params, max_slots=4, max_seq=max_seq,
+        cfg, params, max_slots=4, max_seq=max_seq, kv_page_size=0,
         draft_cfg=dcfg, draft_params=dparams, spec=spec,
     )
     for _ in range(4):
@@ -142,6 +148,122 @@ def bench_spec_decode(accept_p=0.9, gamma=4):
                  "count", round(tokens_per_round, 2)))
     rows.append(("micro", "spec:d2h_per_loop", "spec", "count",
                  round(spec_d2h, 3)))
+    return rows
+
+
+def bench_paged_kv():
+    """Paged KV pool vs the dense per-slot layout (DESIGN.md §5): decode
+    throughput at equal batch, HBM per slot, concurrent slots at equal cache
+    HBM, and TTFT under prompt prefix sharing.
+
+    The equal-batch rows are the CI regression gate's input
+    (``scripts/check_bench_regression.py``): paged decode must stay within
+    10% of dense.  The capacity and TTFT rows are the paging payoff — more
+    slots per HBM byte and prefill skipped in proportion to the shared
+    prefix."""
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq, slots = 256, 4
+    rows = []
+
+    def timed_loop(engine):
+        g0 = engine.generated_tokens_total
+        t0 = time.perf_counter()
+        engine.decode_loop(8)
+        dt = time.perf_counter() - t0
+        assert engine.num_active == slots, "slots retired mid-benchmark"
+        return (engine.generated_tokens_total - g0) / dt
+
+    # -- equal batch: same 4 slots, dense rows vs paged pool.  Fused loops
+    # are timed in adjacent dense/paged PAIRS and the gate ratio is the
+    # median of per-pair ratios: adjacent calls share the machine's load,
+    # so CPU scheduling noise cancels out of the ratio even when absolute
+    # throughput swings run to run.  The tok/s rows keep each side's best
+    # loop for the cross-PR trajectory.  Capacity (max_seq=256) comfortably
+    # exceeds the total microsteps timed.
+    dense = _fresh_engine(cfg, params, max_seq=max_seq)
+    paged = _fresh_engine(cfg, params, max_seq=max_seq, kv_page_size=None)
+    for e in (dense, paged):
+        e.decode_loop(8)  # warmup / compile
+    dense_tps = paged_tps = 0.0
+    ratios = []
+    for _ in range(24):
+        d_t, p_t = timed_loop(dense), timed_loop(paged)
+        dense_tps = max(dense_tps, d_t)
+        paged_tps = max(paged_tps, p_t)
+        ratios.append(p_t / d_t)
+    ratios.sort()
+    rows.append(("micro", "paged:dense_tokens_per_s(k=8)", "dense",
+                 "tok_per_s", round(dense_tps, 1)))
+    rows.append(("micro", "paged:paged_tokens_per_s(k=8)", "paged",
+                 "tok_per_s", round(paged_tps, 1)))
+    rows.append(("micro", "paged:throughput_ratio_vs_dense", "paged",
+                 "ratio", round(ratios[len(ratios) // 2], 3)))
+    rows.append(("micro", "paged:hbm_bytes_per_slot", "dense", "bytes",
+                 dense.kv_cache_bytes() // slots))
+    rows.append(("micro", "paged:hbm_bytes_per_slot", "paged", "bytes",
+                 paged.kv_cache_bytes() // slots))
+
+    # -- equal cache HBM: how many short requests fit concurrently -----
+    page = paged.kv_page_size
+    cap = InferenceEngine(
+        cfg, params, max_slots=64, max_seq=max_seq,
+        kv_pool_pages=slots * (max_seq // page) + 1,  # == dense KV HBM
+    )
+
+    def fill(engine):
+        n = 0
+        while engine.add_request(
+            Request(prompt=np.arange(8), max_new_tokens=24)
+        ):
+            n += 1
+        return n
+
+    # dense comparator: the same cache HBM buys exactly ``slots`` rows
+    dense_cap = InferenceEngine(
+        cfg, params, max_slots=slots, max_seq=max_seq, kv_page_size=0,
+    )
+    assert cap.kv_cache_bytes() <= dense_cap.kv_cache_bytes() * 1.1
+    rows.append(("micro", "paged:max_slots_at_equal_hbm", "dense", "count",
+                 fill(dense_cap)))
+    rows.append(("micro", "paged:max_slots_at_equal_hbm", "paged", "count",
+                 fill(cap)))
+
+    # -- TTFT under prefix sharing -------------------------------------
+    plen = 160  # 10 pages at the default page size of 16
+    base = np.arange(1, plen + 1)
+    for frac, shared_tokens in ((0.0, 0), (0.5, 80), (0.9, 144)):
+        eng = InferenceEngine(cfg, params, max_slots=3, max_seq=max_seq)
+        # warm the compile caches for the exact programs the measured
+        # admission will run, so TTFT times compute, not XLA compilation
+        if shared_tokens:
+            eng.add_request(Request(
+                prompt=base[: shared_tokens + 8], max_new_tokens=1
+            ))  # seeds the radix tree with the shared prefix
+            eng.add_request(Request(
+                prompt=np.concatenate([
+                    base[:shared_tokens],
+                    np.arange(2000, 2000 + plen - shared_tokens),
+                ]),
+                max_new_tokens=1,
+            ))  # compiles the suffix-prefill bucket
+        else:
+            eng.add_request(Request(
+                prompt=np.arange(5000, 5000 + plen), max_new_tokens=1
+            ))  # compiles the cold-prefill bucket
+        eng.decode_loop(1)  # retire the warmups
+        prompt = np.concatenate(
+            [base[:shared_tokens], np.arange(1000, 1000 + plen - shared_tokens)]
+        )
+        skipped0 = eng.prefill_skipped_tokens
+        t0 = time.perf_counter()
+        eng.add_request(Request(prompt=prompt, max_new_tokens=1))
+        ttft_ms = (time.perf_counter() - t0) * 1e3
+        rows.append(("micro", f"paged:ttft_ms(prefix_share={frac:g})",
+                     "paged", "ms", round(ttft_ms, 2)))
+        rows.append(("micro", f"paged:prefill_skipped(prefix_share={frac:g})",
+                     "paged", "tokens",
+                     eng.prefill_skipped_tokens - skipped0))
     return rows
 
 
@@ -172,5 +294,6 @@ def all_rows():
         bench_engine_microstep()
         + bench_prefill_buckets()
         + bench_spec_decode()
+        + bench_paged_kv()
         + bench_control_plane()
     )

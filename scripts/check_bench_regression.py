@@ -1,0 +1,41 @@
+"""CI gate: paged decode throughput must stay within 10% of dense.
+
+Reads the ``paged:*_tokens_per_s(k=8)`` rows ``benchmarks/engine_micro.py``
+just wrote to BENCH_engine.json (same process conditions, measured
+back-to-back) and fails the job on a >10% decode-throughput regression of
+the paged KV path vs the dense layout at equal batch.
+
+    python scripts/check_bench_regression.py [BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+THRESHOLD = 0.90  # paged must reach >= 90% of dense tokens/s
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_engine.json"
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    vals = {case: value for _, case, _, _, value in rows}
+    dense = vals.get("paged:dense_tokens_per_s(k=8)")
+    paged = vals.get("paged:paged_tokens_per_s(k=8)")
+    ratio = vals.get("paged:throughput_ratio_vs_dense")
+    if not dense or not paged or not ratio:
+        print(f"check_bench_regression: paged/dense rows missing from {path}")
+        return 1
+    print(
+        f"paged {paged:.1f} tok/s vs dense {dense:.1f} tok/s "
+        f"(median paired ratio {ratio:.3f}, floor {THRESHOLD})"
+    )
+    if ratio < THRESHOLD:
+        print("FAIL: paged decode regressed >10% vs dense at equal batch")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -193,10 +193,24 @@ class SpecInFRuntime:
             d = self._observe_windows(1)
             did_work = False
             budget_steps = max(int((bubble_s - spent) / step_cost), 1)
-            # online pull-and-execute on idle signal
+            # online pull-and-execute on idle signal.  Admission consults
+            # real capacity first (free slot AND, on paged engines, pool
+            # pages for the request's worst-case need — Principle-I memory
+            # accounting): a request the engine cannot hold *yet* stays
+            # pending instead of being popped and dropped, while one it can
+            # NEVER hold fails loudly rather than starving the queue head.
+            if self._online_pending and not self.engine.request_fits(
+                self._online_pending[0]
+            ):
+                bad = self._online_pending.pop(0)
+                raise ValueError(
+                    f"online request {bad.request_id} can never be admitted "
+                    f"(prompt {len(bad.prompt)} tokens, "
+                    f"max_new={bad.max_new_tokens}) on this engine"
+                )
             if d.status is Status.IDLE and self._online_pending and (
                 self._online_pending[0].arrival_time <= now + spent
-            ):
+            ) and self.engine.can_admit(self._online_pending[0]):
                 req = self._online_pending.pop(0)
                 self._vnow = now + spent
                 ok = self.engine.add_request(req)

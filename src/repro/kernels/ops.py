@@ -146,9 +146,10 @@ def verify_attention(
         scores = jnp.where(mask[:, None], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
-        # empty slots are all-masked -> uniform softmax garbage; zero them to
-        # match the kernel's defined output
-        return jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
+        # all-masked rows (empty slots, and chunk rows whose causal window
+        # is empty when lengths < T) are uniform softmax garbage; zero them
+        # to match the kernel's defined output
+        return jnp.where(bound[:, :, None, None] >= 0, out, 0.0)
     if impl == "pallas":
         from repro.kernels.verify_attention import verify_attention as _kernel
 
@@ -160,6 +161,113 @@ def verify_attention(
             interpret=not _on_tpu(),
         )
     raise ValueError(f"unknown verify attention impl {impl!r}")
+
+
+def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize a paged pool into its per-slot dense layout.
+
+    pool: [P, page, kvH, hd]; block_tables: [B, W] int32 whose LAST column
+    is the overflow sentinel (never holds live KV; ``lengths <= (W-1) *
+    page`` — see ``transformer.init_paged_cache``), so only W-1 columns are
+    gathered and the fallback's attention width matches the dense layout
+    exactly.  Returns [B, (W-1) * page, kvH, hd]; positions past a slot's
+    length hold sentinel/stale garbage, which the caller masks by length
+    exactly as in the dense path."""
+    b, w = block_tables.shape
+    page, kvh, hd = pool.shape[1:]
+    return pool[block_tables[:, :-1]].reshape(b, (w - 1) * page, kvh, hd)
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Single-token decode attention over the paged KV pool.
+
+    q: [B, H, hd]; k/v_pool: [P, page, kvH, hd] physical pages shared across
+    slots; block_tables: [B, W] int32 per-slot logical->physical page map
+    (unused entries hold the sentinel page 0); lengths: [B] int32 valid-KV
+    counts (0 == empty slot -> zero output).  Returns [B, H, hd].
+
+    ``impl``:
+      * "auto"   -- pallas on TPU, xla elsewhere
+      * "xla"    -- gather pages dense, then length-masked attention
+      * "pallas" -- block-table flash-decode kernel (interpret off-TPU)
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return decode_attention(
+            q,
+            _gather_pages(k_pool, block_tables),
+            _gather_pages(v_pool, block_tables),
+            lengths,
+            impl="xla",
+        )
+    if impl == "pallas":
+        from repro.kernels.paged_decode_attention import (
+            paged_decode_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_pool.astype(q.dtype),
+            v_pool.astype(q.dtype),
+            block_tables,
+            lengths,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown paged decode attention impl {impl!r}")
+
+
+def paged_verify_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Chunk-verify attention over the paged KV pool (speculative decoding).
+
+    q: [B, T, H, hd] — the T = gamma+1 chunk queries per slot, whose own K/V
+    has already been scattered into the slot's pages at logical positions
+    ``lengths - T .. lengths - 1``; k/v_pool: [P, page, kvH, hd];
+    block_tables: [B, W] int32; lengths: [B] int32 valid-KV counts
+    *including* the chunk.  Returns [B, T, H, hd].
+
+    ``impl``: same semantics as ``paged_decode_attention``.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return verify_attention(
+            q,
+            _gather_pages(k_pool, block_tables),
+            _gather_pages(v_pool, block_tables),
+            lengths,
+            impl="xla",
+        )
+    if impl == "pallas":
+        from repro.kernels.paged_verify_attention import (
+            paged_verify_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_pool.astype(q.dtype),
+            v_pool.astype(q.dtype),
+            block_tables,
+            lengths,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown paged verify attention impl {impl!r}")
 
 
 def ssm_scan_chunk(xi, dt, B_, C_, A, h0):

@@ -344,6 +344,108 @@ def attention_verify(
     return y, (k_cache, v_cache)
 
 
+def paged_kv_write(
+    pool: jax.Array,
+    new: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+) -> jax.Array:
+    """Scatter new K/V rows into the paged pool through the block table.
+
+    pool: [P, page, kvH, hd]; new: [B, T, kvH, hd]; block_tables: [B, W]
+    int32; positions: [B, T] int32 logical positions.  Positions whose
+    logical page index falls past the table width clamp onto the last
+    column, which the engine keeps permanently at the sentinel page — the
+    fused loops' overflow writes (frozen slots at the sequence boundary,
+    bucket-pad chunk tails) land there instead of corrupting live pages."""
+    page = pool.shape[1]
+    w = block_tables.shape[1]
+    cols = jnp.minimum(positions // page, w - 1)
+    pages = jnp.take_along_axis(block_tables, cols, axis=1)  # [B, T]
+    return pool.at[pages, positions % page].set(new.astype(pool.dtype))
+
+
+def attention_decode_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    kv_pool: tuple[jax.Array, jax.Array],
+    block_tables: jax.Array,
+    cache_index: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token decode against the paged KV pool.
+
+    x: [B, 1, d]; pool k/v: [P, page, kvH, hd] physical pages shared across
+    slots; block_tables: [B, W] int32 logical->physical page map;
+    cache_index: [B] int32 per-slot lengths.  The new token's K/V scatters
+    into the slot's own page at ``index`` (always a private page — shared
+    prefix pages are never written after insertion), then the attention core
+    gathers pages through the block table (``ops.paged_decode_attention``)."""
+    b = x.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    positions = idx[:, None]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    k_pool, v_pool = kv_pool
+    k_pool = paged_kv_write(k_pool, k_new, block_tables, positions)
+    v_pool = paged_kv_write(v_pool, v_new, block_tables, positions)
+    from repro.kernels import ops  # local import to avoid cycles
+
+    out = shard(
+        ops.paged_decode_attention(
+            q[:, 0], k_pool, v_pool, block_tables, idx + 1, impl=impl
+        )[:, None],
+        "bthd",
+    )
+    mask = head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "btd")
+    return y, (k_pool, v_pool)
+
+
+def attention_verify_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    kv_pool: tuple[jax.Array, jax.Array],
+    block_tables: jax.Array,
+    cache_index: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Chunk-verify decode against the paged KV pool: T tokens in one pass.
+
+    x: [B, T, d] chunk embeddings; the chunk's K/V scatters into the slot's
+    pages at logical positions ``index .. index + T - 1`` before the fused
+    prefix+triangle attention (``ops.paged_verify_attention``).  Rollback
+    after acceptance only rewinds ``index``: rejected positions sit past the
+    rewound index inside the slot's *private* pages and are rewritten before
+    ever being attended to — the dense path's stale-overwrite invariant,
+    unchanged by paging (DESIGN.md §5)."""
+    b, t, _ = x.shape
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    positions = idx[:, None] + jnp.arange(t)[None, :]  # [B, T]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    k_pool, v_pool = kv_pool
+    k_pool = paged_kv_write(k_pool, k_new, block_tables, positions)
+    v_pool = paged_kv_write(v_pool, v_new, block_tables, positions)
+    from repro.kernels import ops  # local import to avoid cycles
+
+    out = shard(
+        ops.paged_verify_attention(
+            q, k_pool, v_pool, block_tables, idx + t, impl=impl
+        ),
+        "bthd",
+    )
+    mask = head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "btd")
+    return y, (k_pool, v_pool)
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

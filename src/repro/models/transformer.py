@@ -280,6 +280,41 @@ def init_cache(
     return {"index": jnp.int32(0), "layers": layer_state}
 
 
+def init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    num_pages: int,
+    page_size: int,
+    max_pages_per_slot: int,
+    dtype=jnp.bfloat16,
+) -> Params:
+    """Paged decode cache: physical page pools + per-slot block tables.
+
+    ``layers.k/v`` are [L, P, page, kvH, hd] pools of physical pages shared
+    across slots (prefix-shared pages appear in several block tables);
+    ``block_tables`` is [B, W] int32 with ``W = max_pages_per_slot + 1`` —
+    the extra last column stays permanently at the sentinel page 0 so
+    overflow writes clamp onto a page nobody reads (``L.paged_kv_write``).
+    Attention families only: SSM/hybrid state is O(1) per slot and keeps the
+    dense layout."""
+    assert cfg.family in ("dense", "moe", "audio", "vlm"), (
+        f"paged KV cache is for attention families, not {cfg.family!r}"
+    )
+    l, hd = cfg.num_layers, cfg.resolved_head_dim
+    kv = lambda: jnp.zeros(
+        (l, num_pages, page_size, cfg.num_kv_heads, hd), dtype
+    )
+    return {
+        "index": jnp.zeros((batch,), jnp.int32),
+        "block_tables": jnp.zeros((batch, max_pages_per_slot + 1), jnp.int32),
+        "layers": {"k": kv(), "v": kv()},
+    }
+
+
+def is_paged_cache(cache: Params) -> bool:
+    return isinstance(cache, dict) and "block_tables" in cache
+
+
 # ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------
@@ -305,13 +340,19 @@ def decode_step(
                                   if a.dtype == jnp.float32 and a.ndim > 1 else a, t)
 
     if cfg.family in ("dense", "moe", "audio", "vlm"):
+        bt = cache.get("block_tables")  # paged cache: [B, W] page map
 
         def body(xc, per_layer):
             lp, k_c, v_c = per_layer
             h = L.norm(cfg, xc, lp.get("ln1"))
-            y, (k_c, v_c) = L.attention_decode(
-                cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
-            )
+            if bt is not None:
+                y, (k_c, v_c) = L.attention_decode_paged(
+                    cfg, lp["attn"], h, (k_c, v_c), bt, idx, impl=attn_impl
+                )
+            else:
+                y, (k_c, v_c) = L.attention_decode(
+                    cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
+                )
             xc = xc + y
             h = L.norm(cfg, xc, lp.get("ln2"))
             if cfg.family == "moe":
@@ -371,7 +412,8 @@ def decode_step(
 
     x = L.norm(cfg, x, params.get("final_norm"))
     logits = shard(unembed(cfg, params, x), "btv")[:, 0]
-    return logits, {"index": idx + 1, "layers": new_layers}
+    new_cache = dict(cache, index=idx + 1, layers=new_layers)
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -415,12 +457,18 @@ def decode_chunk(
     *,
     compute_dtype=jnp.bfloat16,
     attn_impl: str = "auto",
+    logits_at: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Params, Optional[Params]]:
     """Score a T = gamma+1 speculative chunk in ONE fused pass.
 
     tokens: [B, T] int32 — current token + gamma draft tokens per slot.
     Returns ``(logits [B, T, V], cache, chunk_states)`` with the cache index
     advanced by T and the chunk's K/V (or SSM state) consumed.
+
+    ``logits_at`` ([] int32, traced) restricts the unembedding to one chunk
+    position — logits come back [B, 1, V].  Chunk-based suffix prefill
+    needs only the last real position's logits, and the vocab projection
+    over a full pad bucket would otherwise dominate its cost.
 
     Attention families score all T positions in parallel through
     ``attention_verify`` (the chunk-verify kernel path) — no sequential
@@ -436,6 +484,7 @@ def decode_chunk(
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         x = params["embed"].astype(compute_dtype)[tokens]  # [B, T, d]
         idx = cache["index"]
+        bt = cache.get("block_tables")  # paged cache: [B, W] page map
         cast = lambda tr: jax.tree.map(
             lambda a: a.astype(compute_dtype)
             if a.dtype == jnp.float32 and a.ndim > 1 else a, tr)
@@ -443,9 +492,14 @@ def decode_chunk(
         def body(xc, per_layer):
             lp, k_c, v_c = per_layer
             h = L.norm(cfg, xc, lp.get("ln1"))
-            y, (k_c, v_c) = L.attention_verify(
-                cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
-            )
+            if bt is not None:
+                y, (k_c, v_c) = L.attention_verify_paged(
+                    cfg, lp["attn"], h, (k_c, v_c), bt, idx, impl=attn_impl
+                )
+            else:
+                y, (k_c, v_c) = L.attention_verify(
+                    cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
+                )
             xc = xc + y
             h = L.norm(cfg, xc, lp.get("ln2"))
             if cfg.family == "moe":
@@ -459,8 +513,14 @@ def decode_chunk(
             (cast(params["layers"]), cache["layers"]["k"], cache["layers"]["v"]),
         )
         x = L.norm(cfg, x, params.get("final_norm"))
+        if logits_at is not None:
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(logits_at, jnp.int32), 1, axis=1
+            )
         logits = shard(unembed(cfg, params, x), "btv")
-        new_cache = {"index": idx + t, "layers": {"k": k_new, "v": v_new}}
+        new_cache = dict(
+            cache, index=idx + t, layers={"k": k_new, "v": v_new}
+        )
         return logits, new_cache, None
 
     # Recurrent families: fused sequential scan with per-step state capture.
@@ -472,7 +532,12 @@ def decode_chunk(
         return c, (logits_t, chunk_recurrent_states(cfg, c["layers"]))
 
     cache, (logits_seq, states_seq) = jax.lax.scan(step, cache, tokens.T)
-    return logits_seq.transpose(1, 0, 2), cache, states_seq
+    logits = logits_seq.transpose(1, 0, 2)
+    if logits_at is not None:
+        logits = jax.lax.dynamic_slice_in_dim(
+            logits, jnp.asarray(logits_at, jnp.int32), 1, axis=1
+        )
+    return logits, cache, states_seq
 
 
 # ---------------------------------------------------------------------------
@@ -524,10 +589,9 @@ def decode_loop(
             if max_seq is not None:
                 active = active & (idx < max_seq - 1)
             toks = jnp.where(active, next_tok, toks)
-            c = {
-                "index": jnp.where(active, new_c["index"], idx),
-                "layers": new_c["layers"],
-            }
+            # dict(new_c, ...) keeps cache keys beyond index/layers (the
+            # paged cache's block_tables) flowing through the scan carry
+            c = dict(new_c, index=jnp.where(active, new_c["index"], idx))
             rem = jnp.where(active, rem - 1, rem)
         else:
             toks, c = next_tok, new_c
@@ -760,6 +824,107 @@ def prefill_into_slot(
         )
     index = cache["index"].at[slot].set(jnp.asarray(length, jnp.int32))
     return tok, {"index": index, "layers": new_layers}
+
+
+def prefill_into_slot_paged(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    length: jax.Array,
+    slot: jax.Array,
+    cache: Params,
+    *,
+    impl: str = "xla",
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    """Cold-path prefill straight into the paged pool.
+
+    Runs the ordinary full-sequence prefill over the [1, S_bucket] prompt —
+    against a *bucket-sized* scratch cache rather than a dense max_seq row —
+    then scatters the K/V bucket page-by-page into the slot's block-table
+    pages.  The bucket must be page-aligned (the engine raises its minimum
+    prefill bucket to the page size).  Bucket-pad positions past ``length``
+    scatter into either the slot's last page beyond ``index`` (stale,
+    overwritten before read) or unallocated table entries, which hold the
+    sentinel page — a write sink nobody attends to.
+
+    Returns ``(first generated token [] int32, updated paged cache)``."""
+    k_pool = cache["layers"]["k"]  # [L, P, page, kvH, hd]
+    page = k_pool.shape[2]
+    sb = inputs.shape[1]
+    assert sb % page == 0, f"prefill bucket {sb} not page-aligned ({page})"
+    nbp = sb // page
+    logits, cache1 = prefill(
+        cfg, params, inputs, sb, impl=impl, compute_dtype=compute_dtype,
+        cache_dtype=k_pool.dtype, length=length,
+    )
+    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    pages = jax.lax.dynamic_slice(
+        cache["block_tables"], (slot, 0), (1, nbp)
+    )[0]  # [nbp] physical page per bucket page
+
+    def scatter(pool, new):  # new: [L, 1, SB, kvH, hd]
+        l = pool.shape[0]
+        newp = new[:, 0].reshape(l, nbp, page, *pool.shape[3:])
+        return pool.at[:, pages].set(newp.astype(pool.dtype))
+
+    new_layers = {
+        "k": scatter(cache["layers"]["k"], cache1["layers"]["k"]),
+        "v": scatter(cache["layers"]["v"], cache1["layers"]["v"]),
+    }
+    index = cache["index"].at[slot].set(jnp.asarray(length, jnp.int32))
+    return tok, dict(cache, index=index, layers=new_layers)
+
+
+def prefill_suffix_into_slot(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    suffix_len: jax.Array,
+    shared_len: jax.Array,
+    slot: jax.Array,
+    cache: Params,
+    *,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+) -> tuple[jax.Array, Params]:
+    """Prefix-hit prefill: score only the prompt *suffix* against shared
+    prefix pages already resident in the pool.
+
+    tokens: [1, T_bucket] int32 suffix tokens zero-padded to a compile
+    bucket; suffix_len: [] int32 true suffix length; shared_len: [] int32
+    prefix length served from the radix cache (a page multiple, >= 1 page);
+    slot: [] int32 target slot whose block table already maps the shared
+    pages (refcounted) plus freshly-allocated suffix pages.
+
+    The heavy lifting is ``decode_chunk`` on a one-row view of the paged
+    cache: the chunk-verify path attends suffix queries to the shared
+    prefix plus the chunk's own causal triangle and scatters suffix K/V into
+    the slot's private pages — so prefill compute is O(suffix), ZERO FLOPs
+    for the shared length.  Bucket-pad rows write stale/sentinel K/V and
+    attend garbage, but the returned logits row ``suffix_len - 1`` attends
+    real positions only.
+
+    Returns ``(first generated token [] int32, updated paged cache)``."""
+    slot = jnp.asarray(slot, jnp.int32)
+    shared = jnp.asarray(shared_len, jnp.int32)
+    row = jax.lax.dynamic_slice_in_dim(
+        cache["block_tables"], slot, 1, axis=0
+    )  # [1, W]
+    view = {
+        "index": shared[None],
+        "block_tables": row,
+        "layers": cache["layers"],
+    }
+    pos = jnp.asarray(suffix_len, jnp.int32) - 1
+    logits, view, _ = decode_chunk(
+        cfg, params, tokens, view, compute_dtype=compute_dtype,
+        attn_impl=attn_impl, logits_at=pos,
+    )
+    tok = jnp.argmax(logits[0, 0]).astype(jnp.int32)
+    index = cache["index"].at[slot].set(shared + suffix_len)
+    return tok, dict(cache, index=index, layers=view["layers"])
 
 
 def _mamba2_with_state(cfg, p, x, length=None):

@@ -1,3 +1,4 @@
 from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kv_pool import PagePool, RadixCache
 
-__all__ = ["InferenceEngine", "Request"]
+__all__ = ["InferenceEngine", "Request", "PagePool", "RadixCache"]

@@ -10,6 +10,19 @@ index, so requests of different lengths run concurrently (continuous
 batching).  Finished slots are refilled from the queue by the caller
 (``core/filling.py`` or the standalone serve loop).
 
+Paged KV cache (DESIGN.md §5): attention-family engines store KV in a
+shared pool of fixed-size physical pages addressed through per-slot block
+tables (``kv_page_size``; 0 forces the legacy dense ``[B, S_max]`` layout,
+kept for recurrent families and A/B benchmarks).  Admission is
+capacity-based — a request is admitted iff the pool can cover its
+worst-case page need, so ``max_slots`` may exceed what the dense layout
+could hold — and a radix tree over page-aligned prompt chunks serves shared
+prefixes straight from cached pages: a prefix hit increfs the pages, skips
+prefill compute for the covered length, and prefills only the suffix
+through the chunk-verify path.  Pages are topped up lazily ahead of each
+fused loop, trimmed back after speculative rollback, and released (not
+index-reset) at retirement.
+
 Fast path (DESIGN.md §3):
 
 * ``decode_loop(k)`` fuses k microsteps into one jitted ``lax.scan`` with
@@ -49,12 +62,20 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SpecDecodeConfig
 from repro.models import transformer as T
+from repro.serving.kv_pool import PagePool, RadixCache
 
 _req_counter = itertools.count()
 
 #: Fused-loop sizes the engine compiles on demand; callers bucket their k so
 #: the set of compiled programs stays bounded (DESIGN.md §2).
 DECODE_K_BUCKETS = (1, 2, 4, 8)
+
+#: Default physical page size (tokens) for the paged KV pool.  A power of
+#: two, so power-of-two prefill buckets stay page-aligned; >= 8 sublanes so
+#: one page is a legal Pallas KV tile (DESIGN.md §5).
+DEFAULT_KV_PAGE_SIZE = 16
+
+_ATTENTION_FAMILIES = ("dense", "moe", "audio", "vlm")
 
 
 @dataclasses.dataclass
@@ -87,6 +108,9 @@ class InferenceEngine:
         draft_params: Any = None,
         spec: Optional[SpecDecodeConfig] = None,
         spec_seed: int = 0,
+        kv_page_size: Optional[int] = None,
+        kv_pool_pages: Optional[int] = None,
+        enable_prefix_cache: bool = True,
     ):
         self.cfg = cfg
         self.max_slots = max_slots
@@ -95,8 +119,57 @@ class InferenceEngine:
         self.params = params
         self.clock: Callable[[], float] = clock or time.monotonic
         self.min_prefill_bucket = min_prefill_bucket
-        cache = T.init_cache(cfg, max_slots, max_seq, compute_dtype)
-        cache["index"] = jnp.zeros((max_slots,), jnp.int32)
+
+        # --- KV layout: paged pool (attention families) or dense rows ---
+        if kv_page_size is None:
+            kv_page_size = (
+                DEFAULT_KV_PAGE_SIZE if cfg.family in _ATTENTION_FAMILIES
+                else 0
+            )
+        self.paged = kv_page_size > 0
+        self.kv_page_size = kv_page_size
+        self.pool: Optional[PagePool] = None
+        self.prefix_cache: Optional[RadixCache] = None
+        if self.paged:
+            assert cfg.family in _ATTENTION_FAMILIES, (
+                f"paged KV cache needs an attention family, not {cfg.family!r}"
+            )
+            assert kv_page_size & (kv_page_size - 1) == 0, (
+                "kv_page_size must be a power of two (page-aligned buckets)"
+            )
+            self.pages_per_slot = -(-max_seq // kv_page_size)
+            # default pool: dense-equivalent logical capacity (+ sentinel);
+            # callers shrink it (or raise max_slots) to trade layout slack
+            # for concurrency — see benchmarks/engine_micro.py
+            num_pages = kv_pool_pages or (
+                max_slots * self.pages_per_slot + 1
+            )
+            self.pool = PagePool(num_pages, kv_page_size)
+            if enable_prefix_cache:
+                self.prefix_cache = RadixCache(self.pool)
+            cache = T.init_paged_cache(
+                cfg, max_slots, num_pages, kv_page_size,
+                self.pages_per_slot, compute_dtype,
+            )
+            # prefill buckets must stay page-aligned for the page scatter
+            # (round up: doubling then preserves page multiples)
+            self.min_prefill_bucket = kv_page_size * (
+                -(-max(min_prefill_bucket, 1) // kv_page_size)
+            )
+            self._slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+            self._slot_reserved = [0] * max_slots
+            self._slot_idx = [0] * max_slots
+            self._slot_horizon = [0] * max_slots
+            # host mirror of the device block tables: mutations land here
+            # and ship as ONE whole-table h2d transfer (the table is tiny;
+            # per-entry device scatters cost more in dispatch than the copy)
+            self._bt_host = np.zeros(
+                (max_slots, self.pages_per_slot + 1), np.int32
+            )
+            self._bt_dirty = False
+        else:
+            cache = T.init_cache(cfg, max_slots, max_seq, compute_dtype)
+            cache["index"] = jnp.zeros((max_slots,), jnp.int32)
         self.cache = cache
         self.slots: list[Optional[Request]] = [None] * max_slots
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
@@ -105,6 +178,9 @@ class InferenceEngine:
         self.d2h_transfers = 0  # device->host syncs issued by engine code
         self.generated_tokens_total = 0
         self.prefill_bucket_lengths: set[int] = set()
+        # prefix-cache counters (prefill_skip_fraction reads these)
+        self.prefill_prompt_tokens = 0
+        self.prefill_skipped_tokens = 0
         # speculative-decoding counters (spec_acceptance_rate reads these)
         self.spec_rounds = 0
         self.spec_drafted = 0
@@ -124,13 +200,29 @@ class InferenceEngine:
             static_argnames=("k",),
             donate_argnames=("tokens", "cache", "remaining"),
         )
-        self._prefill_slot = jax.jit(
-            functools.partial(
-                T.prefill_into_slot, cfg, max_seq=max_seq,
-                impl=prefill_impl, compute_dtype=compute_dtype,
-            ),
-            donate_argnames=("cache",),
-        )
+        if self.paged:
+            self._prefill_slot = jax.jit(
+                functools.partial(
+                    T.prefill_into_slot_paged, cfg,
+                    impl=prefill_impl, compute_dtype=compute_dtype,
+                ),
+                donate_argnames=("cache",),
+            )
+            self._suffix_prefill = jax.jit(
+                functools.partial(
+                    T.prefill_suffix_into_slot, cfg,
+                    compute_dtype=compute_dtype, attn_impl=decode_impl,
+                ),
+                donate_argnames=("cache",),
+            )
+        else:
+            self._prefill_slot = jax.jit(
+                functools.partial(
+                    T.prefill_into_slot, cfg, max_seq=max_seq,
+                    impl=prefill_impl, compute_dtype=compute_dtype,
+                ),
+                donate_argnames=("cache",),
+            )
 
         # --- speculative decoding (draft/target pairing) ---------------
         self.draft_cfg = draft_cfg
@@ -193,16 +285,258 @@ class InferenceEngine:
         """Distinct prefill programs compiled (one per prompt-length bucket)."""
         return len(self.prefill_bucket_lengths)
 
-    def _bucket_len(self, n: int) -> int:
-        """Power-of-two compile bucket for a prompt of length ``n``."""
+    def _bucket_len(self, n: int, page_aligned: Optional[bool] = None) -> int:
+        """Power-of-two compile bucket for a prompt of length ``n``.
+
+        Page-aligned buckets (the paged default) cap at ``max_seq`` rounded
+        UP to a page multiple — the bucket-page scatter needs alignment
+        even when ``max_seq`` itself is not page-aligned, and positions
+        past ``max_seq`` are pad, scattered into the sentinel.  Dense
+        consumers (the legacy layout, and a spec pairing's dense draft
+        cache on an otherwise-paged engine) must pass
+        ``page_aligned=False``: their prefill pads K/V to exactly
+        ``max_seq`` and cannot take a larger bucket."""
+        if page_aligned is None:
+            page_aligned = self.paged
         b = self.min_prefill_bucket
         while b < n:
             b *= 2
+        if page_aligned:
+            return min(b, self.pages_per_slot * self.kv_page_size)
         return min(b, self.max_seq)
 
     # ------------------------------------------------------------------
+    # Paged-pool bookkeeping
+    # ------------------------------------------------------------------
+    def _page_need(self, req: Request) -> tuple[int, int]:
+        """(worst-case total pages, prompt pages) for ``req`` — the
+        Principle-I capacity question admission answers."""
+        n = len(req.prompt)
+        horizon = min(n + req.max_new_tokens, self.max_seq)
+        return self.pool.pages_for(horizon), self.pool.pages_for(n)
+
+    def _shared_prefix(self, prompt: np.ndarray, record: bool = True):
+        """Longest radix-cached full-page prefix of ``prompt``, capped one
+        token short of the whole prompt so at least one suffix token remains
+        to produce the first-token logits."""
+        if self.prefix_cache is None:
+            return []
+        return self.prefix_cache.match(prompt[: len(prompt) - 1],
+                                       record=record)
+
+    def _ensure_capacity(self, need: int) -> bool:
+        """Make ``need`` pages promisable, evicting LRU cached prefixes."""
+        while self.pool.available < need:
+            if self.prefix_cache is None:
+                return False
+            if self.prefix_cache.evict(need - self.pool.available) == 0:
+                return False
+        return True
+
+    def request_fits(self, req: Request) -> bool:
+        """Structural admissibility: could ``req`` EVER be admitted, even on
+        an idle engine?  False means waiting will not help (prompt exceeds
+        max_seq, or its worst-case page need exceeds the whole pool) —
+        queue managers should fail such a request loudly instead of letting
+        it starve the head of the line."""
+        if len(req.prompt) > self.max_seq:
+            return False
+        if self.paged:
+            total_pages, _ = self._page_need(req)
+            return total_pages <= self.pool.num_pages - 1
+        return True
+
+    def can_admit(self, req: Request) -> bool:
+        """Capacity probe for Algorithm-1 admission: a free slot exists AND
+        (paged engines) the pool can cover the request's worst-case page
+        need, counting evictable cached prefixes but never the pages the
+        request itself would share.  Non-mutating."""
+        if not self.free_slots() or not self.request_fits(req):
+            return False
+        if not self.paged:
+            return True
+        total_pages, _ = self._page_need(req)
+        prompt = np.asarray(req.prompt, np.int32)
+        shared = self._shared_prefix(prompt, record=False)
+        evictable = 0
+        if self.prefix_cache is not None:
+            evictable = self.prefix_cache.evictable_pages() - sum(
+                1 for p in shared if self.pool.refcount[p] == 1
+            )
+        return total_pages - len(shared) <= self.pool.available + evictable
+
+    def _sync_block_tables(self) -> None:
+        self.cache["block_tables"] = jnp.asarray(self._bt_host)
+        self._bt_dirty = False
+
+    def _set_block_table_row(self, slot: int, pages: list[int]) -> None:
+        self._bt_host[slot] = 0
+        self._bt_host[slot, : len(pages)] = pages
+        self._sync_block_tables()
+
+    def _top_up_pages(self, steps: int) -> None:
+        """Extend every active slot's block table to cover the next
+        ``steps`` token writes (converting admission reservations into
+        physical pages) — the fused loops then never need a host alloc."""
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            cover = min(self._slot_idx[i] + steps, self._slot_horizon[i])
+            need = self.pool.pages_for(cover)
+            cur = len(self._slot_pages[i])
+            if need > cur:
+                got = self.pool.alloc(need - cur, reserved=True)
+                self._slot_reserved[i] -= len(got)
+                self._bt_host[i, cur: cur + len(got)] = got
+                self._slot_pages[i].extend(got)
+                self._bt_dirty = True
+        if self._bt_dirty:
+            self._sync_block_tables()
+
+    def _trim_slot_pages(self, i: int) -> None:
+        """Release pages past the page holding the slot's next write
+        position — speculative rollback's freed capacity returns to the
+        pool (as restored reservation) instead of idling.  Marks the block
+        tables dirty; the caller syncs once per sweep."""
+        keep = self._slot_idx[i] // self.kv_page_size + 1
+        pages = self._slot_pages[i]
+        if len(pages) <= keep:
+            return
+        drop = pages[keep:]
+        del pages[keep:]
+        freed = self.pool.decref(drop)
+        # trimmed pages sit past the prompt (idx >= prompt length), so the
+        # radix tree never holds them: every drop frees
+        assert len(freed) == len(drop), "trimmed a shared page"
+        self.pool.reserve(len(drop))
+        self._slot_reserved[i] += len(drop)
+        self._bt_host[i, keep: keep + len(drop)] = 0
+        self._bt_dirty = True
+
+    def _retire_slot(self, i: int, now: float) -> Request:
+        """Single retirement path for decode_loop / spec_decode_loop /
+        decode_microstep: releases the slot's pages (paged) and resets BOTH
+        cache indices — the draft index too, which the plain-loop paths
+        previously left stale for the next occupant of the slot."""
+        req = self.slots[i]
+        req.finish_time = now
+        self.slots[i] = None
+        self.cache["index"] = self.cache["index"].at[i].set(0)
+        if self.spec_enabled:
+            self.draft_cache["index"] = (
+                self.draft_cache["index"].at[i].set(0)
+            )
+        if self.paged:
+            self.pool.decref(self._slot_pages[i])
+            self.pool.unreserve(self._slot_reserved[i])
+            self._slot_pages[i] = []
+            self._slot_reserved[i] = 0
+            self._slot_idx[i] = 0
+            self._slot_horizon[i] = 0
+            self._bt_host[i] = 0
+            # mirror-only: the retirement sweep syncs once for all slots
+            self._bt_dirty = True
+        return req
+
+    # ------------------------------------------------------------------
+    def _embed_or_pass(self, params, buf: np.ndarray):
+        if self.cfg.embed_inputs:
+            # stub frontend: embed prompt tokens through the output table
+            return params["embed"][jnp.asarray(buf)].astype(
+                self.compute_dtype
+            )
+        return jnp.asarray(buf)
+
+    def _bucket_buf(
+        self, tokens: np.ndarray, page_aligned: Optional[bool] = None
+    ) -> np.ndarray:
+        sb = self._bucket_len(len(tokens), page_aligned)
+        self.prefill_bucket_lengths.add(sb)
+        buf = np.zeros((1, sb), np.int32)
+        buf[0, : len(tokens)] = tokens
+        return buf
+
+    def _paged_admit(self, slot: int, req: Request) -> Optional[int]:
+        """Capacity-based paged admission: match the radix prefix, make room
+        (evicting LRU cached prefixes if needed), allocate prompt pages now
+        and reserve the decode horizon, then prefill — the whole prompt on a
+        miss, only the suffix on a hit."""
+        n = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        total_pages, prompt_pages = self._page_need(req)
+        shared_pages = self._shared_prefix(prompt)
+        if shared_pages:
+            # hold the matched pages before eviction can reclaim them
+            self.pool.incref(shared_pages)
+        if not self._ensure_capacity(total_pages - len(shared_pages)):
+            if shared_pages:
+                self.pool.decref(shared_pages)
+            return None
+        new_pages = self.pool.alloc(prompt_pages - len(shared_pages))
+        self.pool.reserve(total_pages - prompt_pages)
+        row = shared_pages + new_pages
+        self._slot_pages[slot] = list(row)
+        self._slot_reserved[slot] = total_pages - prompt_pages
+        self._slot_horizon[slot] = min(n + req.max_new_tokens, self.max_seq)
+        self._slot_idx[slot] = n
+        self._set_block_table_row(slot, row)
+
+        shared = len(shared_pages) * self.kv_page_size
+        if shared:
+            suffix = prompt[shared:]
+            buf = self._bucket_buf(suffix)
+            tok, self.cache = self._suffix_prefill(
+                self.params, jnp.asarray(buf), jnp.int32(len(suffix)),
+                jnp.int32(shared), jnp.int32(slot), self.cache,
+            )
+            self.prefill_skipped_tokens += shared
+        else:
+            buf = self._bucket_buf(prompt)
+            tok, self.cache = self._prefill_slot(
+                self.params, self._embed_or_pass(self.params, buf),
+                jnp.int32(n), jnp.int32(slot), self.cache,
+            )
+        self.prefill_prompt_tokens += n
+        if self.prefix_cache is not None:
+            # cache the prompt's full pages for future admissions (the tree
+            # takes its own reference; they outlive this slot)
+            self.prefix_cache.insert(prompt, row[: n // self.kv_page_size])
+        if self.spec_enabled:
+            # the dense draft cache has no prefix pool: it prefill-tracks
+            # the full prompt (cheap by construction; first-token output is
+            # never fetched — no extra device->host transfer).  Its bucket
+            # caps at max_seq, not the page-aligned roundup.
+            dbuf = self._bucket_buf(prompt, page_aligned=False)
+            _, self.draft_cache = self._draft_prefill(
+                self.draft_params, self._embed_or_pass(self.draft_params, dbuf),
+                jnp.int32(n), jnp.int32(slot), self.draft_cache,
+            )
+        return tok
+
+    def _dense_admit(self, slot: int, req: Request) -> int:
+        n = len(req.prompt)
+        buf = self._bucket_buf(np.asarray(req.prompt, np.int32))
+        tok, self.cache = self._prefill_slot(
+            self.params, self._embed_or_pass(self.params, buf),
+            jnp.int32(n), jnp.int32(slot), self.cache,
+        )
+        self.prefill_prompt_tokens += n
+        if self.spec_enabled:
+            # draft cache tracks the same prefix; its first-token output is
+            # never fetched (no extra device->host transfer)
+            _, self.draft_cache = self._draft_prefill(
+                self.draft_params, self._embed_or_pass(self.draft_params, buf),
+                jnp.int32(n), jnp.int32(slot), self.draft_cache,
+            )
+        return tok
+
+    # ------------------------------------------------------------------
     def add_request(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot.  One engine microstep."""
+        """Prefill ``req`` into a free slot.  One engine microstep.
+
+        Returns False when no slot is free — or, on paged engines, when the
+        pool cannot cover the request's worst-case page need even after
+        evicting unreferenced cached prefixes (capacity-based admission)."""
         free = self.free_slots()
         if not free:
             return False
@@ -220,30 +554,12 @@ class InferenceEngine:
             # is a real arrival instant, and restamping it at admission
             # would erase the request's queueing delay.
             req.arrival_time = self.clock()
-        sb = self._bucket_len(n)
-        prompt = np.zeros((1, sb), np.int32)
-        prompt[0, :n] = np.asarray(req.prompt, np.int32)
-
-        def embed_or_pass(params):
-            if self.cfg.embed_inputs:
-                # stub frontend: embed prompt tokens through the output table
-                return params["embed"][jnp.asarray(prompt)].astype(
-                    self.compute_dtype
-                )
-            return jnp.asarray(prompt)
-
-        self.prefill_bucket_lengths.add(sb)
-        tok, self.cache = self._prefill_slot(
-            self.params, embed_or_pass(self.params), jnp.int32(n),
-            jnp.int32(slot), self.cache,
-        )
-        if self.spec_enabled:
-            # draft cache tracks the same prefix; its first-token output is
-            # never fetched (no extra device->host transfer)
-            _, self.draft_cache = self._draft_prefill(
-                self.draft_params, embed_or_pass(self.draft_params),
-                jnp.int32(n), jnp.int32(slot), self.draft_cache,
-            )
+        if self.paged:
+            tok = self._paged_admit(slot, req)
+            if tok is None:
+                return False
+        else:
+            tok = self._dense_admit(slot, req)
         req.generated.append(int(tok))
         self.d2h_transfers += 1
         self.generated_tokens_total += 1
@@ -265,6 +581,9 @@ class InferenceEngine:
         bound the number of compiled programs."""
         if self.num_active == 0 or k <= 0:
             return []
+        if self.paged:
+            # extend block tables to cover the loop's k writes per slot
+            self._top_up_pages(k)
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
             if r is not None:
@@ -286,11 +605,12 @@ class InferenceEngine:
             n = int(steps_np[i])
             req.generated.extend(int(t) for t in toks_np[:n, i])
             self.generated_tokens_total += n
+            if self.paged:
+                self._slot_idx[i] = int(idx_np[i])
             if rem_np[i] == 0 or idx_np[i] >= self.max_seq - 1:
-                req.finish_time = now
-                finished.append(req)
-                self.slots[i] = None
-                self.cache["index"] = self.cache["index"].at[i].set(0)
+                finished.append(self._retire_slot(i, now))
+        if self.paged and self._bt_dirty:
+            self._sync_block_tables()  # one upload covers every retirement
         return finished
 
     # ------------------------------------------------------------------
@@ -308,6 +628,10 @@ class InferenceEngine:
         assert self.spec_enabled, "engine built without a draft pairing"
         if self.num_active == 0 or k <= 0:
             return []
+        if self.paged:
+            # worst case every round accepts the whole chunk: cover
+            # k * (gamma + 1) writes per slot
+            self._top_up_pages(k * (gamma + 1))
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
             if r is not None:
@@ -337,14 +661,16 @@ class InferenceEngine:
                 self.generated_tokens_total += n
             self.spec_accepted += int(acc_np[:, i].sum())
             self.spec_drafted += int(prop_np[:, i].sum())
+            if self.paged:
+                self._slot_idx[i] = int(idx_np[i])
             if rem_np[i] == 0 or idx_np[i] + gamma >= self.max_seq:
-                req.finish_time = now
-                finished.append(req)
-                self.slots[i] = None
-                self.cache["index"] = self.cache["index"].at[i].set(0)
-                self.draft_cache["index"] = (
-                    self.draft_cache["index"].at[i].set(0)
-                )
+                finished.append(self._retire_slot(i, now))
+            elif self.paged:
+                # rollback freed tokens past the accepted prefix: release
+                # the pages the worst-case top-up provisioned beyond them
+                self._trim_slot_pages(i)
+        if self.paged and self._bt_dirty:
+            self._sync_block_tables()  # one upload covers trims + retires
         return finished
 
     # ------------------------------------------------------------------
@@ -358,6 +684,8 @@ class InferenceEngine:
         fast path is ``decode_loop``."""
         if self.num_active == 0:
             return []
+        if self.paged:
+            self._top_up_pages(1)
         logits, self.cache = self._decode(self.params, self.tokens, self.cache)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.tokens = next_tokens
@@ -373,20 +701,40 @@ class InferenceEngine:
                 continue
             req.generated.append(int(host_tokens[i]))
             self.generated_tokens_total += 1
+            if self.paged:
+                self._slot_idx[i] = int(idx_np[i])
             if len(req.generated) >= req.max_new_tokens or int(
                 idx_np[i]
             ) >= (self.max_seq - 1):
-                req.finish_time = now
-                finished.append(req)
-                self.slots[i] = None
-                self.cache["index"] = self.cache["index"].at[i].set(0)
+                finished.append(self._retire_slot(i, now))
+        if self.paged and self._bt_dirty:
+            self._sync_block_tables()  # one upload covers every retirement
         return finished
 
     # ------------------------------------------------------------------
-    def memory_bytes(self) -> int:
-        """Weights + cache footprint (Principle-I input)."""
-        param_b = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.params))
-        cache_b = sum(
+    @property
+    def prefill_skip_fraction(self) -> float:
+        """Fraction of admitted prompt tokens served from cached prefix
+        pages instead of prefill compute."""
+        return self.prefill_skipped_tokens / max(self.prefill_prompt_tokens, 1)
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the KV cache (pool or dense rows) alone."""
+        return sum(
             x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
         )
-        return param_b + cache_b
+
+    def memory_bytes(self) -> int:
+        """Weights + cache footprint (Principle-I input).
+
+        Counts the target params and KV cache (dense rows or paged pool +
+        block tables) AND — when a draft pairing is attached — the draft
+        params and draft cache, which earlier revisions omitted,
+        understating the capacity Algorithm 1 budgets against."""
+        leaves = list(jax.tree.leaves(self.params)) + list(
+            jax.tree.leaves(self.cache)
+        )
+        if self.spec_enabled:
+            leaves += list(jax.tree.leaves(self.draft_params))
+            leaves += list(jax.tree.leaves(self.draft_cache))
+        return sum(x.size * x.dtype.itemsize for x in leaves)

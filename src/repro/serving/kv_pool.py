@@ -1,0 +1,253 @@
+"""Paged KV pool: page allocator + prefix-sharing radix tree (host side).
+
+The engine's KV memory is a shared pool of fixed-size physical pages
+(``[L, P, page, kvH, hd]`` on device); each slot names its pages through a
+block-table row.  This module owns the *host-side* bookkeeping — which pages
+are free, who holds references, and which page sequences are reusable as
+shared prompt prefixes — so admission becomes a capacity question
+("do enough pages exist?") instead of a layout question ("is a dense row
+free?").  DESIGN.md §5 documents the invariants.
+
+**PagePool** — free-list allocator with refcounts and reservations.
+
+  * Page 0 is a **sentinel**: never allocated.  Retired slots' block-table
+    rows point at it, so the fused loops' masked writes for empty/frozen
+    slots land in a page nobody reads instead of corrupting live data.
+  * ``refcount[p]`` counts holders: each slot using the page, plus 1 if the
+    radix tree caches it.  ``decref`` to zero returns the page to the free
+    list.
+  * **Reservations** make admission honest under lazy allocation: a request
+    is admitted only if the pool can cover its *worst-case* page need
+    (prompt + full token budget), but pages are physically allocated just
+    ahead of the decode loops (``InferenceEngine._top_up_pages``).  The
+    reserved count is the promised-but-unallocated balance; ``available``
+    (free minus reserved) is what admission may spend.
+
+**RadixCache** — prefix tree over page-aligned prompt token chunks.
+
+  * A node is one *full* page: key = the ``page_size`` token ids it holds,
+    value = the physical page.  Only pages completely covered by a prompt
+    are inserted — a page holding bucket-pad garbage can never be shared.
+  * ``match`` walks the longest cached prefix; the caller increfs the
+    returned pages into a new slot's block table and skips prefill for the
+    covered length (the hit is page-granular by construction).
+  * The tree holds its own reference on every cached page, so prefixes
+    survive slot retirement.  ``evict`` reclaims least-recently-used leaves
+    whose only holder is the tree; because a slot that references a page
+    also references its whole prefix path, a refcount-1 node can only have
+    refcount-1 descendants — every tree-only subtree is evictable.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["PagePool", "RadixCache", "SENTINEL_PAGE"]
+
+#: Physical page reserved as the write sink for empty/frozen slots.
+SENTINEL_PAGE = 0
+
+
+class PagePool:
+    """Fixed-size physical page allocator with refcounts and reservations."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "pool needs the sentinel plus >= 1 real page"
+        assert page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.refcount = np.zeros((num_pages,), np.int64)
+        # LIFO free list (pop from the end); sentinel page 0 excluded.
+        self._free = list(range(num_pages - 1, 0, -1))
+        self.reserved = 0
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages admission may still promise (free minus already-reserved)."""
+        return len(self._free) - self.reserved
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Physical pages needed to back ``tokens`` KV entries."""
+        return -(-tokens // self.page_size)
+
+    # -- reservations --------------------------------------------------
+    def reserve(self, n: int) -> None:
+        assert n >= 0 and self.available >= n, (
+            f"reserve({n}) with only {self.available} available"
+        )
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self.reserved
+        self.reserved -= n
+
+    # -- alloc / refcount ----------------------------------------------
+    def alloc(self, n: int, *, reserved: bool = False) -> list[int]:
+        """Pop ``n`` free pages (refcount 1 each).  ``reserved=True``
+        converts previously-reserved pages into allocated ones (the lazy
+        top-up path); otherwise the pages must fit in ``available``."""
+        if n == 0:
+            return []
+        if reserved:
+            assert n <= self.reserved, "top-up exceeds this pool's reservation"
+            assert n <= len(self._free), "reservation invariant violated"
+            self.reserved -= n
+        else:
+            assert n <= self.available, (
+                f"alloc({n}) with only {self.available} available"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        self.refcount[pages] = 1
+        return pages
+
+    def incref(self, pages: Iterable[int]) -> None:
+        for p in pages:
+            assert p != SENTINEL_PAGE and self.refcount[p] > 0, (
+                f"incref of unallocated page {p}"
+            )
+            self.refcount[p] += 1
+
+    def decref(self, pages: Iterable[int]) -> list[int]:
+        """Drop one reference per page; returns the pages that became free."""
+        freed = []
+        for p in pages:
+            assert p != SENTINEL_PAGE and self.refcount[p] > 0, (
+                f"decref of unallocated page {p}"
+            )
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+
+class _Node:
+    __slots__ = ("chunk", "page", "parent", "children", "last_use")
+
+    def __init__(self, chunk, page: int, parent: Optional["_Node"]):
+        self.chunk = chunk  # tuple of page_size token ids (None at root)
+        self.page = page
+        self.parent = parent
+        self.children: dict = {}
+        self.last_use = 0
+
+
+class RadixCache:
+    """Prefix tree mapping page-aligned prompt chunks to cached pages."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.root = _Node(None, SENTINEL_PAGE, None)
+        self._tick = 0
+        self.pages_cached = 0
+        # prefix-cache counters (engine surfaces these)
+        self.hits = 0
+        self.misses = 0
+
+    def _chunks(self, tokens: Sequence[int]):
+        ps = self.pool.page_size
+        for j in range(len(tokens) // ps):
+            yield tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.last_use = self._tick
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int], record: bool = True) -> list[int]:
+        """Pages of the longest cached full-page prefix of ``tokens``.
+
+        Does NOT take references — the caller must ``pool.incref`` the
+        returned pages before anything that could trigger eviction.
+        ``record=False`` makes it a pure probe (no LRU touch, no hit/miss
+        counters) for capacity queries like ``engine.can_admit``."""
+        node, pages = self.root, []
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            if record:
+                self._touch(child)
+            pages.append(child.page)
+            node = child
+        if record:
+            if pages:
+                self.hits += 1
+            else:
+                self.misses += 1
+        return pages
+
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> None:
+        """Cache the full-page prefix of ``tokens`` backed by ``pages``
+        (logical order; ``pages[j]`` holds tokens ``[j*ps, (j+1)*ps)``).
+
+        New nodes incref their page (the tree's own hold).  Chunks already
+        cached keep the tree's existing page — the caller's duplicate copy
+        stays private to its slot and is freed at retirement."""
+        node = self.root
+        for j, chunk in enumerate(self._chunks(tokens)):
+            if j >= len(pages):
+                break
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, pages[j], node)
+                node.children[chunk] = child
+                self.pool.incref([pages[j]])
+                self.pages_cached += 1
+            self._touch(child)
+            node = child
+
+    # ------------------------------------------------------------------
+    def evictable_pages(self) -> int:
+        """Pages reclaimable by eviction (cached pages only the tree holds)."""
+        count = 0
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if self.pool.refcount[n.page] == 1:
+                count += 1
+            stack.extend(n.children.values())
+        return count
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` pages, LRU leaves first; returns pages freed.
+
+        One tree walk collects the evictable leaves into a heap; parents
+        exposed by an eviction are pushed as they become leaves, so the
+        whole call is near-linear in tree size rather than one full walk
+        per page freed."""
+        heap: list[tuple[int, int, _Node]] = []
+        tie = 0  # heap tiebreak: nodes are not orderable
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            elif self.pool.refcount[node.page] == 1:
+                heapq.heappush(heap, (node.last_use, tie, node))
+                tie += 1
+        freed = 0
+        while freed < n and heap:
+            _, _, victim = heapq.heappop(heap)
+            del victim.parent.children[victim.chunk]
+            freed += len(self.pool.decref([victim.page]))
+            self.pages_cached -= 1
+            parent = victim.parent
+            if parent is not self.root and not parent.children and (
+                self.pool.refcount[parent.page] == 1
+            ):
+                heapq.heappush(heap, (parent.last_use, tie, parent))
+                tie += 1
+        return freed

@@ -82,20 +82,24 @@ def spec_round(
     n_out = jnp.where(active, a + 1, 0)
     new_idx = jnp.where(active, idx0 + a + 1, idx0)
     tokens = jnp.where(active, nxt, tokens)
-    cache = {
-        "index": new_idx,
-        "layers": T.merge_recurrent_states(
+    # dict(cache, ...) keeps keys beyond index/layers (the paged target
+    # cache's block_tables) flowing through the scan carry
+    cache = dict(
+        cache,
+        index=new_idx,
+        layers=T.merge_recurrent_states(
             cfg, cache["layers"],
             rollback_recurrent(cfg, t_states, a, active, old_t),
         ),
-    }
-    dcache = {
-        "index": new_idx,
-        "layers": T.merge_recurrent_states(
+    )
+    dcache = dict(
+        dcache,
+        index=new_idx,
+        layers=T.merge_recurrent_states(
             draft_cfg, dcache["layers"],
             rollback_recurrent(draft_cfg, d_states, a, active, old_d),
         ),
-    }
+    )
     rem = rem - n_out
     out = jnp.where(active[:, None], out, 0)
     # acceptance stats use the unclamped run: a budget cut is not a draft
