@@ -25,7 +25,8 @@ from repro.core.profiles import dp_profile
 from repro.data.pipeline import SyntheticDataset
 from repro.launch.mesh import make_dev_mesh
 from repro.runtime.step import make_train_step
-from repro.serving.engine import InferenceEngine, Request
+from repro.serving.core import Priority, SamplingParams
+from repro.serving.engine import InferenceEngine
 
 
 def model_config(large: bool):
@@ -80,11 +81,14 @@ def main():
           f"(limit {spec_cfg.hbm_limit_bytes/2**30:.0f} GiB)")
 
     # --- collocated engine + offline backlog ------------------------------
+    # OFFLINE submissions wait in the core's queue until Algorithm 1's
+    # token grant affords their first quantum (WAITING -> RUNNING)
     engine = InferenceEngine(cfg, state["params"], max_slots=4,
                              max_seq=args.seq_len)
     for i in range(4):
-        engine.add_request(Request(prompt=np.arange(8) % cfg.vocab_size,
-                                   max_new_tokens=10**9))
+        engine.core.submit(np.arange(8) % cfg.vocab_size,
+                           SamplingParams(max_new_tokens=10**9),
+                           priority=Priority.OFFLINE)
 
     rt = SpecInFRuntime(
         train_step=lambda s, b: step(s, b),

@@ -17,7 +17,8 @@ from repro.core.profiles import dp_profile
 from repro.data.pipeline import SyntheticDataset
 from repro.launch.mesh import make_dev_mesh
 from repro.runtime.step import make_train_step
-from repro.serving.engine import InferenceEngine, Request
+from repro.serving.core import Priority, SamplingParams
+from repro.serving.engine import InferenceEngine
 
 
 def main():
@@ -34,29 +35,34 @@ def main():
             b = ds.next_batch()
             yield {k: jnp.asarray(v) for k, v in b.items()}
 
-    rng = np.random.default_rng(0)
-    arrivals = np.cumsum(rng.exponential(0.05, 12))
-    requests = [
-        Request(prompt=rng.integers(0, cfg.vocab_size, 6),
-                max_new_tokens=4, arrival_time=float(t), online=True)
-        for t in arrivals
-    ]
-
     engine = InferenceEngine(cfg, state["params"], max_slots=2, max_seq=48)
     profile = dp_profile(cfg.name, compute_s=0.05, comm_s=0.04)
     rt = SpecInFRuntime(
         train_step=lambda s, b: step(s, b), train_state=state,
         batch_iter=batches(), profile=profile, engine=engine,
-        online_requests=requests,
         cfg=SpecInFConfig(busy_hold_ms=5.0), decode_microstep_s=0.002,
     )
+    # submit the Poisson arrivals straight into the engine core (ONLINE
+    # priority): Algorithm 1's policy pulls them inside idle windows, and
+    # preempts offline slots if capacity ever blocks an arrival
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.05, 12))
+    requests = [
+        engine.core.submit(
+            rng.integers(0, cfg.vocab_size, 6),
+            SamplingParams(max_new_tokens=4),
+            priority=Priority.ONLINE, arrival_time=float(t),
+        )
+        for t in arrivals
+    ]
     t0 = time.time()
     m = rt.run(num_iterations=12)
     print(f"trained {m.train_iterations} iterations "
           f"(loss {m.train_losses[0]:.3f} -> {m.train_losses[-1]:.3f}) in "
           f"{time.time()-t0:.1f}s wall")
     print(f"online: served {m.online_served}/{len(requests)} requests inside "
-          f"bubbles, p95 latency {m.p95_latency_s()*1e3:.1f} ms (virtual)")
+          f"bubbles, p95 latency {m.p95_latency_s()*1e3:.1f} ms, "
+          f"p95 TTFT {m.p95_ttft_s()*1e3:.1f} ms (virtual)")
     print("phases:", m.phase_counts)
 
 

@@ -15,8 +15,9 @@ from repro import configs
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import SyntheticDataset
 from repro.launch.mesh import make_dev_mesh
-from repro.models import transformer as T
 from repro.runtime.step import make_train_step
+from repro.serving.core import Priority, SamplingParams
+from repro.serving.engine import InferenceEngine
 
 
 def main():
@@ -43,22 +44,18 @@ def main():
             print(f"step {i:3d} loss {float(m['loss']):.4f} "
                   f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f}")
 
-    # ---- prefill + greedy decode ------------------------------------------
+    # ---- greedy decode through the engine lifecycle core ------------------
+    # submit() queues the request; stream() yields tokens as EngineCore.step()
+    # quanta produce them (prefill -> first token, fused decode -> the rest).
     params = state["params"]
+    engine = InferenceEngine(cfg, params, max_slots=1, max_seq=32)
     prompt = np.arange(8) % cfg.vocab_size
-    if cfg.embed_inputs:
-        inputs = params["embed"][jnp.asarray(prompt)][None].astype(jnp.float32)
-    else:
-        inputs = jnp.asarray(prompt, jnp.int32)[None]
-    logits, cache = T.prefill(cfg, params, inputs, max_seq=32)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [int(tok[0])]
-    for _ in range(8):
-        logits, cache = T.decode_step(cfg, params, tok, cache)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(int(tok[0]))
+    req = engine.core.submit(
+        prompt, SamplingParams(max_new_tokens=9), priority=Priority.ONLINE
+    )
+    out = list(engine.core.stream(req))
     print("prompt:", prompt.tolist())
-    print("generated:", out)
+    print("generated:", out, f"({req.finish_reason})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+"""CI guard: the deprecated InferenceEngine shim must not drift from the
+EngineCore it delegates to.
+
+Three checks (all signature-shape based, so they are stable across Python
+versions' annotation formatting):
+
+1. The shim methods (``add_request`` / ``decode_loop`` /
+   ``spec_decode_loop``) keep their pinned parameter lists — callers from
+   PR 1-3 must keep working unchanged.
+2. Each shim's core delegate (``add_legacy`` / ``run_legacy``) accepts the
+   shim's parameters, so delegation cannot silently lose an argument.
+3. The EngineCore public surface (``submit`` / ``step`` / ``stream`` /
+   ``abort`` / ``preempt``) keeps its pinned parameter lists.
+
+    PYTHONPATH=src python scripts/check_api_surface.py
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.core import EngineCore  # noqa: E402
+from repro.serving.engine import InferenceEngine  # noqa: E402
+
+#: shim method -> (pinned params, core delegate it must route through)
+SHIMS = {
+    "add_request": (["req"], "add_legacy"),
+    "decode_loop": (["k"], "run_legacy"),
+    "spec_decode_loop": (["k", "gamma"], "run_legacy"),
+}
+
+#: EngineCore public surface -> pinned params
+CORE_SURFACE = {
+    "submit": ["prompt", "sampling", "priority", "arrival_time"],
+    "step": ["grant"],
+    "stream": ["req", "grant"],
+    "abort": ["req"],
+    "preempt": ["target"],
+    "add_legacy": ["req"],
+    "run_legacy": ["k", "gamma"],
+}
+
+
+def params_of(fn) -> list[str]:
+    return [p for p in inspect.signature(fn).parameters if p != "self"]
+
+
+def main() -> int:
+    failures = []
+    for name, (pinned, delegate) in SHIMS.items():
+        shim = getattr(InferenceEngine, name, None)
+        if shim is None:
+            failures.append(f"InferenceEngine.{name} is missing")
+            continue
+        got = params_of(shim)
+        if got != pinned:
+            failures.append(
+                f"InferenceEngine.{name} signature drifted: "
+                f"{got} != pinned {pinned}"
+            )
+        core_fn = getattr(EngineCore, delegate, None)
+        if core_fn is None:
+            failures.append(f"EngineCore.{delegate} is missing")
+            continue
+        missing = [p for p in pinned if p not in params_of(core_fn)]
+        if missing:
+            failures.append(
+                f"EngineCore.{delegate} no longer accepts {missing} "
+                f"(shim InferenceEngine.{name} passes them)"
+            )
+        if delegate not in inspect.getsource(shim):
+            failures.append(
+                f"InferenceEngine.{name} no longer delegates to "
+                f"EngineCore.{delegate}"
+            )
+    for name, pinned in CORE_SURFACE.items():
+        fn = getattr(EngineCore, name, None)
+        if fn is None:
+            failures.append(f"EngineCore.{name} is missing")
+            continue
+        got = params_of(fn)
+        if got != pinned:
+            failures.append(
+                f"EngineCore.{name} signature drifted: {got} != pinned "
+                f"{pinned}"
+            )
+    if failures:
+        print("API surface drift between the deprecated shim and EngineCore:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"OK: {len(SHIMS)} shim methods and {len(CORE_SURFACE)} core "
+          "methods match the pinned surface")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

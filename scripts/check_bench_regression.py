@@ -1,9 +1,12 @@
-"""CI gate: paged decode throughput must stay within 10% of dense.
+"""CI gate: paged decode throughput must stay within 10% of dense, and
+preemption must protect online p95 under mixed load.
 
 Reads the ``paged:*_tokens_per_s(k=8)`` rows ``benchmarks/engine_micro.py``
 just wrote to BENCH_engine.json (same process conditions, measured
 back-to-back) and fails the job on a >10% decode-throughput regression of
-the paged KV path vs the dense layout at equal batch.
+the paged KV path vs the dense layout at equal batch.  Also checks the
+``core:online_p95_ms(mixed_load)`` pair (virtual-clock, deterministic):
+online p95 with preemption enabled must be <= online p95 without it.
 
     python scripts/check_bench_regression.py [BENCH_engine.json]
 """
@@ -32,6 +35,17 @@ def main() -> int:
     )
     if ratio < THRESHOLD:
         print("FAIL: paged decode regressed >10% vs dense at equal batch")
+        return 1
+    by_policy = {(case, policy): value for _, case, policy, _, value in rows}
+    pre = by_policy.get(("core:online_p95_ms(mixed_load)", "preempt"))
+    nopre = by_policy.get(("core:online_p95_ms(mixed_load)", "no_preempt"))
+    if pre is None or nopre is None:
+        print(f"check_bench_regression: core preemption rows missing from {path}")
+        return 1
+    print(f"online p95 mixed load: preempt {pre:.2f} ms vs "
+          f"no-preempt {nopre:.2f} ms")
+    if pre > nopre:
+        print("FAIL: preemption made online p95 WORSE under mixed load")
         return 1
     print("OK")
     return 0

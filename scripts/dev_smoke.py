@@ -3,7 +3,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.models import transformer as T

@@ -9,7 +9,7 @@ least one request can be served per iteration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 from repro.configs.base import SpecInFConfig
 

@@ -17,11 +17,17 @@ Two modes (DESIGN.md §2):
   picks the bucket each iteration.
 
 Engines built with a draft/target pairing route every quantum through the
-speculative loop instead (``engine.spec_decode_loop``), and the token grant
-is spent in *verified* tokens: the gamma controller (``spec.controller``)
-maps Algorithm-1's phase + observed acceptance to a draft length, and the k
-bucket is sized by the expected verified-token yield per round
-(DESIGN.md §4).
+speculative loop instead, and the token grant is spent in *verified*
+tokens: the gamma controller (``spec.controller``) maps Algorithm-1's
+phase + observed acceptance to a draft length, and the k bucket is sized
+by the expected verified-token yield per round (DESIGN.md §4).
+
+Since the EngineCore redesign (DESIGN.md §6) Algorithm 1 is ONE pluggable
+``SchedulerPolicy`` (``SpecInFPolicy``): the runtime feeds each monitor
+window's decision to ``EngineCore.step(grant)`` and the policy decides
+admission (online pull-and-execute, preempting RUNNING offline slots when
+capacity blocks), the offline token metering, and the k/gamma quantum
+shape.
 """
 from __future__ import annotations
 
@@ -35,7 +41,17 @@ from repro.configs.base import SpecInFConfig
 from repro.core.bubble_monitor import BubbleMonitor
 from repro.core.profiles import IterationProfile
 from repro.core.scheduler import AdaptiveKernelScheduler, Status
-from repro.serving.engine import DECODE_K_BUCKETS, InferenceEngine, Request
+from repro.serving.core import (
+    Grant,
+    Priority,
+    RequestState,
+    SamplingParams,
+    SchedulerPolicy,
+    StepOutputs,
+    StepPlan,
+    largest_bucket,
+)
+from repro.serving.engine import InferenceEngine, Request
 from repro.spec.controller import AdaptiveGammaController
 
 
@@ -47,14 +63,125 @@ class FillingMetrics:
     offline_tokens_generated: int = 0
     online_served: int = 0
     online_latencies_s: list = dataclasses.field(default_factory=list)
+    #: time-to-first-token per online request (arrival -> first output
+    #: token), stamped by the core on the step that produced it — prefill
+    #: skips from prefix-cache hits show up here, where end-to-end latency
+    #: alone would hide them.
+    online_ttft_s: list = dataclasses.field(default_factory=list)
     virtual_time_s: float = 0.0
     phase_counts: dict = dataclasses.field(default_factory=dict)
     spec_rounds: int = 0
+    preemptions: int = 0
 
     def p95_latency_s(self) -> float:
         if not self.online_latencies_s:
             return float("nan")
         return float(np.percentile(self.online_latencies_s, 95))
+
+    def ttft_percentile_s(self, q: float) -> float:
+        if not self.online_ttft_s:
+            return float("nan")
+        return float(np.percentile(self.online_ttft_s, q))
+
+    def p95_ttft_s(self) -> float:
+        return self.ttft_percentile_s(95)
+
+
+class SpecInFPolicy(SchedulerPolicy):
+    """Algorithm 1 as a ``SchedulerPolicy`` (paper §3.3 -> DESIGN.md §6).
+
+    * ONLINE admission is the pull-and-execute path: gated on the IDLE
+      status and arrival time.  When capacity blocks (no free slot, or no
+      pool pages), admission preempts a RUNNING OFFLINE slot instead of
+      queueing behind it — the paper's p95 protection inside bubbles.
+    * OFFLINE quanta spend the Kernel-Barrier token grant, and only run
+      when the grant covers one whole quantum (speculative engines spend
+      grants in *verified* tokens, so the bar is the expected yield of one
+      round at the phase's draft length).
+    * Online execution, once admitted, is never token-metered — only its
+      admission is gated.
+    """
+
+    def __init__(
+        self,
+        *,
+        microstep_tokens: float = 1.0,
+        gamma_ctrl: Optional[AdaptiveGammaController] = None,
+        preemption: bool = True,
+    ):
+        #: Kernel-Barrier token cost of one plain microstep (1 token/ms).
+        self.microstep_tokens = microstep_tokens
+        self.gamma_ctrl = gamma_ctrl
+        self.preemption = preemption
+
+    def _spec(self, core) -> bool:
+        return core.engine.spec_enabled and self.gamma_ctrl is not None
+
+    def min_offline_grant(self, core, phase) -> float:
+        """Smallest grant that pays for one whole offline quantum."""
+        if self._spec(core):
+            g = self.gamma_ctrl.gamma_for(phase)
+            return self.gamma_ctrl.expected_tokens_per_round(g)
+        return self.microstep_tokens
+
+    def plan(self, core, grant: Grant) -> StepPlan:
+        admit = []
+        if grant.online_ok:
+            admit += [
+                cr for cr in core.waiting[Priority.ONLINE]
+                if cr.arrival_time <= grant.now
+            ]
+        offline_grant_ok = grant.tokens >= self.min_offline_grant(
+            core, grant.phase
+        )
+        if offline_grant_ok:
+            admit += [
+                cr for cr in core.waiting[Priority.OFFLINE]
+                if cr.arrival_time <= grant.now
+            ]
+        plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
+        online = [
+            cr for cr in list(core.slot_requests.values()) + admit
+            if cr.priority is Priority.ONLINE
+        ]
+        room = max(int(grant.max_cost_steps), 1)
+        if online:
+            # dedicated quantum: size by the online work's remaining budget
+            want = max(max(cr.remaining_budget for cr in online), 1)
+            self._size_quantum(plan, core, grant, want)
+        elif core.slot_requests or admit:
+            # offline quantum: the grant must cover it whole
+            if offline_grant_ok:
+                if self._spec(core):
+                    self._size_quantum(plan, core, grant, grant.tokens)
+                else:
+                    steps = int(grant.tokens // self.microstep_tokens)
+                    plan.k = largest_bucket(min(steps, room))
+                    plan.cost_steps = float(plan.k)
+        return plan
+
+    def _size_quantum(self, plan, core, grant, want_tokens: float) -> None:
+        """Pick k (and gamma) so the quantum's expected token yield stays
+        within ``want_tokens`` and its cost within the bubble room."""
+        if self._spec(core):
+            g = self.gamma_ctrl.gamma_for(grant.phase)
+            exp = self.gamma_ctrl.expected_tokens_per_round(g)
+            rc = self.gamma_ctrl.round_cost_steps(g)
+            afford = max(int(want_tokens / max(exp, 1e-9)), 1)
+            left = max(int(grant.max_cost_steps / rc), 1)
+            plan.k = largest_bucket(min(afford, left))
+            plan.gamma = g
+            plan.cost_steps = plan.k * rc
+        else:
+            room = max(int(grant.max_cost_steps), 1)
+            plan.k = largest_bucket(min(room, int(max(want_tokens, 1))))
+            plan.cost_steps = float(plan.k)
+
+    def observe(self, outputs: StepOutputs) -> None:
+        if self.gamma_ctrl is not None and outputs.spec_proposed:
+            self.gamma_ctrl.observe(
+                outputs.spec_accepted, outputs.spec_proposed
+            )
 
 
 class SpecInFRuntime:
@@ -98,16 +225,46 @@ class SpecInFRuntime:
                 sc.gamma_buckets, ewma=sc.accept_ewma,
                 draft_cost_ratio=sc.draft_cost_ratio,
             )
-        self._online_pending = sorted(
-            online_requests or [], key=lambda r: r.arrival_time
-        )
         self._window_s = cfg.window_ms / 1e3
         # Bind the engine to the runtime's virtual clock: every request
         # timestamp then comes from ONE timebase (never mixed with
         # time.monotonic), and latencies are internally consistent.
         self._vnow = 0.0
+        self.core = None
         if engine is not None:
             engine.clock = lambda: self._vnow
+            # Algorithm 1 as the engine core's scheduler policy.  Reusing
+            # ``engine.core`` keeps requests admitted through the legacy
+            # shim (add_request) in the same lifecycle the runtime steps.
+            self.core = engine.core
+            self.core.policy = SpecInFPolicy(
+                microstep_tokens=decode_microstep_s / 1e-3,
+                gamma_ctrl=self.gamma_ctrl,
+            )
+            # Requests submitted/admitted before this point were stamped on
+            # the engine's OLD clock (usually wall time).  Restamp them to
+            # the virtual epoch so they are pullable from the first bubble
+            # — the same "no mixed timebases" rule the legacy add_request
+            # applied to default-arrival offline work.  RUNNING slots are
+            # restamped too: a wall-clock arrival would otherwise never
+            # satisfy the policy's arrival gate if the slot is preempted
+            # and must be re-admitted on the virtual clock.
+            for q in self.core.waiting.values():
+                for cr in q:
+                    cr.arrival_time = 0.0
+            for cr in self.core.slot_requests.values():
+                cr.arrival_time = 0.0
+            for r in sorted(
+                online_requests or [], key=lambda r: r.arrival_time
+            ):
+                self.core.submit(
+                    r.prompt,
+                    SamplingParams(max_new_tokens=r.max_new_tokens),
+                    priority=(
+                        Priority.ONLINE if r.online else Priority.OFFLINE
+                    ),
+                    arrival_time=r.arrival_time,
+                )
 
     # ------------------------------------------------------------------
     def _observe_windows(self, n: int, activity: int = 0):
@@ -128,58 +285,19 @@ class SpecInFRuntime:
             max(1, int(round(span_s / self._window_s))), activity
         )
 
-    @staticmethod
-    def _k_bucket(steps: int) -> int:
-        """Largest fused-loop bucket not exceeding ``steps`` (min 1)."""
-        return max(pick_bucket(steps, 1.0, DECODE_K_BUCKETS), 1)
-
-    def _spec_min_grant(self, phase) -> float:
-        """Smallest Algorithm-1 grant (in verified tokens) that pays for one
-        speculative round at the phase's draft length."""
-        g = self.gamma_ctrl.gamma_for(phase)
-        return self.gamma_ctrl.expected_tokens_per_round(g)
-
-    def _spec_quantum(
-        self, phase, token_budget: float, max_spend_s: float, base_now: float
-    ) -> tuple[int, float]:
-        """One fused speculative loop sized so its *expected verified-token*
-        yield stays within ``token_budget`` — the grant is spent in verified
-        tokens, not microsteps.  The gamma controller picks the draft length
-        from the Algorithm-1 phase and the engine's observed acceptance;
-        each round costs ``round_cost_steps`` microstep-equivalents of
-        virtual time.  Returns ``(microstep_equivalents, elapsed_s)`` so the
-        caller observes monitor windows in proportion to the virtual time
-        actually spent (one observe per microstep-equivalent, the same
-        convention as the plain path)."""
-        g = self.gamma_ctrl.gamma_for(phase)
-        exp_tokens = self.gamma_ctrl.expected_tokens_per_round(g)
-        round_s = self.decode_microstep_s * self.gamma_ctrl.round_cost_steps(g)
-        afford = max(int(token_budget / max(exp_tokens, 1e-9)), 1)
-        left = max(int(max_spend_s / round_s), 1)
-        k = self._k_bucket(min(afford, left))
-        dt = k * round_s
-        self._vnow = base_now + dt
-        a0, p0 = self.engine.spec_accepted, self.engine.spec_drafted
-        self.engine.spec_decode_loop(k, g)
-        self.gamma_ctrl.observe(
-            self.engine.spec_accepted - a0, self.engine.spec_drafted - p0
-        )
-        self.metrics.spec_rounds += k
-        quanta = max(k, int(round(dt / self.decode_microstep_s)))
-        return quanta, dt
-
     def _fill_bubble(self, bubble_s: float) -> None:
-        """Fill a virtual bubble of ``bubble_s`` with real engine compute.
+        """Fill a virtual bubble of ``bubble_s`` with real engine compute,
+        one ``EngineCore.step()`` quantum at a time.
 
-        Microsteps run through the sync-free fused path
-        (``engine.decode_loop``): Algorithm 1's token grant picks a k bucket,
-        the device runs k microsteps with one host round-trip, and the
-        monitor/scheduler are fed the k windows the loop covered.
-
-        Speculative engines route every quantum through
-        ``engine.spec_decode_loop`` instead: each round multiplies the
-        tokens extracted per grant by the accepted draft length, so the
-        grant is spent in *verified* tokens (``_spec_quantum``)."""
+        Each pass observes one 2 ms monitor window, converts the
+        Algorithm-1 decision into a ``Grant`` (token grant, IDLE gate for
+        online admission, phase for the gamma controller, and the bubble
+        room as ``max_cost_steps``), and lets ``SpecInFPolicy`` decide what
+        the quantum does: admit (preempting offline slots when an online
+        arrival is capacity-blocked), pick the k bucket / draft length, and
+        drive the fused loop.  The step's cost in microstep-equivalents
+        advances the virtual clock and the monitor window count — the same
+        accounting whether the quantum was plain or speculative."""
         if self.engine is None:
             self.metrics.virtual_time_s += bubble_s
             self._advance_windows(bubble_s, activity=0)
@@ -187,99 +305,60 @@ class SpecInFRuntime:
         now = self.metrics.virtual_time_s
         spent = 0.0
         step_cost = self.decode_microstep_s
-        cost_tokens = step_cost / 1e-3  # 1 token == 1 ms (KB metering)
-        use_spec = self.engine.spec_enabled and self.gamma_ctrl is not None
         while spent < bubble_s:
             d = self._observe_windows(1)
-            did_work = False
-            budget_steps = max(int((bubble_s - spent) / step_cost), 1)
-            # online pull-and-execute on idle signal.  Admission consults
-            # real capacity first (free slot AND, on paged engines, pool
-            # pages for the request's worst-case need — Principle-I memory
-            # accounting): a request the engine cannot hold *yet* stays
-            # pending instead of being popped and dropped, while one it can
-            # NEVER hold fails loudly rather than starving the queue head.
-            if self._online_pending and not self.engine.request_fits(
-                self._online_pending[0]
-            ):
-                bad = self._online_pending.pop(0)
-                raise ValueError(
-                    f"online request {bad.request_id} can never be admitted "
-                    f"(prompt {len(bad.prompt)} tokens, "
-                    f"max_new={bad.max_new_tokens}) on this engine"
-                )
-            if d.status is Status.IDLE and self._online_pending and (
-                self._online_pending[0].arrival_time <= now + spent
-            ) and self.engine.can_admit(self._online_pending[0]):
-                req = self._online_pending.pop(0)
-                self._vnow = now + spent
-                ok = self.engine.add_request(req)
-                if ok:
-                    # the outer observe above covers one window of the first
-                    # inner loop; every later window gets its own observe
-                    covered = 1
-                    total0 = self.engine.generated_tokens_total
-                    req0 = len(req.generated)
-                    while req.finish_time is None and spent < bubble_s:
-                        want = max(req.max_new_tokens - len(req.generated), 1)
-                        if use_spec:
-                            k, dt = self._spec_quantum(
-                                d.phase, float(want), bubble_s - spent,
-                                now + spent,
-                            )
-                        else:
-                            left = max(int((bubble_s - spent) / step_cost), 1)
-                            k = self._k_bucket(min(left, want))
-                            dt = k * step_cost
-                            self._vnow = now + spent + dt
-                            self.engine.decode_loop(k)
-                        spent += dt
-                        self._observe_windows(k - covered)
-                        covered = 0
-                    # offline slots piggyback on the online loop's fused
-                    # microsteps; credit their tokens to the offline meter
-                    self.metrics.offline_tokens_generated += (
-                        self.engine.generated_tokens_total - total0
-                    ) - (len(req.generated) - req0)
-                    if req.finish_time is not None:
-                        self.metrics.online_served += 1
-                        self.metrics.online_latencies_s.append(
-                            req.finish_time - req.arrival_time
-                        )
-                    did_work = True
-            # offline quanta under token metering (speculative engines spend
-            # the grant in verified tokens, plain engines in microsteps);
-            # either way the grant must cover one whole quantum — a spec
-            # round is only admitted once the grant affords its expected
-            # verified-token yield, so small conservative/incremental grants
-            # never over-spend the bubble budget
-            elif self.engine.num_active > 0 and (
-                d.tokens >= self._spec_min_grant(d.phase)
-                if use_spec else d.tokens >= cost_tokens
-            ):
-                before = self.engine.generated_tokens_total
-                if use_spec:
-                    k, dt = self._spec_quantum(
-                        d.phase, d.tokens, bubble_s - spent, now + spent
-                    )
-                else:
-                    k = self._k_bucket(
-                        min(int(d.tokens // cost_tokens), budget_steps)
-                    )
-                    dt = k * step_cost
-                    self._vnow = now + spent + dt
-                    self.engine.decode_loop(k)
-                self.metrics.offline_microsteps += k
-                self.metrics.offline_tokens_generated += (
-                    self.engine.generated_tokens_total - before
-                )
-                spent += dt
-                self._observe_windows(k - 1)
-                did_work = True
-            if not did_work:
+            base = now + spent
+            self._vnow = base  # admission/TTFT stamps land at quantum start
+            grant = Grant(
+                tokens=d.tokens,
+                online_ok=d.status is Status.IDLE,
+                phase=d.phase,
+                now=base,
+                max_cost_steps=max((bubble_s - spent) / step_cost, 1.0),
+                # retirement stamps land at quantum END: the core advances
+                # the clock once the plan's cost is known, before the loop
+                advance_clock=lambda steps, _b=base: setattr(
+                    self, "_vnow", _b + steps * step_cost
+                ),
+            )
+            out = self.core.step(grant)
+            if out.cost_steps <= 0:
                 spent += self._window_s
+                continue
+            dt = out.cost_steps * step_cost
+            spent += dt
+            self._vnow = base + dt
+            # the outer observe covered the quantum's first window
+            quanta = max(out.k, int(round(out.cost_steps)))
+            self._observe_windows(quanta - 1)
+            self._record_step(out)
         self.metrics.virtual_time_s += bubble_s
         self._vnow = self.metrics.virtual_time_s
+
+    def _record_step(self, out: StepOutputs) -> None:
+        """Fold one quantum's StepOutputs into FillingMetrics."""
+        online_active = False
+        for ro in out.outputs:
+            if ro.priority is Priority.ONLINE:
+                if ro.new_tokens or ro.state is RequestState.RUNNING:
+                    online_active = True
+                if ro.ttft_s is not None:
+                    self.metrics.online_ttft_s.append(ro.ttft_s)
+            else:
+                # offline slots also piggyback on online-dedicated quanta;
+                # their tokens always credit the offline meter
+                self.metrics.offline_tokens_generated += len(ro.new_tokens)
+        if out.gamma is not None:
+            self.metrics.spec_rounds += out.k
+        if not online_active:
+            self.metrics.offline_microsteps += out.k
+        self.metrics.preemptions += len(out.preempted)
+        for cr in out.finished:
+            if cr.priority is Priority.ONLINE:
+                self.metrics.online_served += 1
+                self.metrics.online_latencies_s.append(
+                    cr.finish_time - cr.arrival_time
+                )
 
     # ------------------------------------------------------------------
     def run(self, num_iterations: int) -> FillingMetrics:
@@ -348,10 +427,8 @@ def make_collocated_step(
 
 
 def pick_bucket(tokens: float, microstep_tokens: float, buckets=(0, 1, 2, 4, 8)) -> int:
-    """Largest bucket affordable under the current Algorithm-1 token grant."""
-    affordable = int(tokens // max(microstep_tokens, 1e-9))
-    best = 0
-    for b in buckets:
-        if b <= affordable:
-            best = b
-    return best
+    """Largest bucket affordable under the current Algorithm-1 token grant.
+
+    Thin wrapper over ``serving.core.largest_bucket`` (one bucket-floor
+    implementation); a leading 0 bucket means "grant affords nothing"."""
+    return largest_bucket(int(tokens // max(microstep_tokens, 1e-9)), buckets)

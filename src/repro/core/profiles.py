@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.core.collocation import InstanceProfile, TrainingProfile
 from repro.core.hardware import HardwareSpec
 

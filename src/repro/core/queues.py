@@ -51,19 +51,33 @@ def poisson_arrivals(
 
 
 class RequestQueue:
-    """FIFO with arrival-time gating (requests become visible at their
-    arrival timestamp)."""
+    """Priority-aware FIFO with arrival-time gating (requests become
+    visible at their arrival timestamp).
+
+    ``pull`` serves the earliest-arrived ONLINE request first, then falls
+    back to offline work: the old strictly-FIFO pull could park an online
+    arrival behind an earlier offline queue head for the offline request's
+    whole service time — head-of-line blocking the paper's p95 story
+    cannot afford.  Within a priority class, order stays FIFO by arrival.
+    """
 
     def __init__(self, requests: list[SimRequest]):
-        self._pending = collections.deque(sorted(requests, key=lambda r: r.arrival_s))
+        by_arrival = sorted(requests, key=lambda r: r.arrival_s)
+        self._online = collections.deque(r for r in by_arrival if r.online)
+        self._offline = collections.deque(
+            r for r in by_arrival if not r.online
+        )
         self.completed: list[SimRequest] = []
 
     def available(self, now_s: float) -> int:
-        return sum(1 for r in self._pending if r.arrival_s <= now_s)
+        return sum(
+            1 for r in (*self._online, *self._offline) if r.arrival_s <= now_s
+        )
 
     def pull(self, now_s: float) -> Optional[SimRequest]:
-        if self._pending and self._pending[0].arrival_s <= now_s:
-            return self._pending.popleft()
+        for q in (self._online, self._offline):
+            if q and q[0].arrival_s <= now_s:
+                return q.popleft()
         return None
 
     def done(self, req: SimRequest) -> None:
@@ -71,7 +85,12 @@ class RequestQueue:
 
     @property
     def remaining(self) -> int:
-        return len(self._pending)
+        return len(self._online) + len(self._offline)
+
+    @property
+    def pending(self) -> list[SimRequest]:
+        """Snapshot of not-yet-pulled requests (online first)."""
+        return [*self._online, *self._offline]
 
     def p95_latency(self) -> float:
         lats = [r.latency_s for r in self.completed if r.latency_s is not None]

@@ -21,7 +21,6 @@ Contention model (fit to the paper's Co-Exec observations, §5.2):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import numpy as np
@@ -326,8 +325,8 @@ def simulate(
     """
     m = offline_instances + online_instances
     policy.begin(profile, cal, max(m, 1))
-    if online_queue is not None and online_queue._pending:
-        svc = float(np.median([r.service_s for r in online_queue._pending]))
+    if online_queue is not None and online_queue.pending:
+        svc = float(np.median([r.service_s for r in online_queue.pending]))
         if hasattr(policy, "online_service_s"):
             policy.online_service_s = svc
     tick = cal.tick_s

@@ -20,8 +20,6 @@ import sys
 import time
 import traceback
 
-import jax
-
 from repro import configs
 from repro.launch import cells as C
 from repro.launch import hlo as H

@@ -166,7 +166,6 @@ def _trip_count(cond_instrs: list[Instr]) -> int:
     """lax.scan loop conditions compare the counter against constant(N)."""
     consts = {}
     for ins in cond_instrs:
-        m = _CONST_RE.search(ins.opcode + "(" + ins.rest)
         if ins.opcode == "constant":
             mm = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
             if mm:

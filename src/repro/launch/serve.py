@@ -1,7 +1,14 @@
-"""Serving CLI — continuous-batching engine with Poisson request load.
+"""Serving CLI — the EngineCore request-lifecycle surface under Poisson load.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \\
       --requests 32 --mean-interval-ms 20
+
+All requests are submitted up front (``EngineCore.submit``, ONLINE
+priority, explicit arrival times) and the loop just calls
+``core.step()``: each quantum drains every admissible arrived request
+(the old loop busy-polled ``pending[0]`` and admitted at most one per
+pass), picks a responsive k bucket while arrivals are outstanding, and
+streams per-request deltas/TTFT/finish reasons back in ``StepOutputs``.
 """
 from __future__ import annotations
 
@@ -13,7 +20,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serving.engine import InferenceEngine, Request
+from repro.serving.core import Priority, SamplingParams
+from repro.serving.engine import InferenceEngine
 
 
 def main() -> None:
@@ -36,38 +44,34 @@ def main() -> None:
     engine = InferenceEngine(cfg, params, max_slots=args.slots,
                              max_seq=args.max_seq,
                              clock=lambda: time.monotonic() - t0)
+    core = engine.core
 
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(
         rng.exponential(args.mean_interval_ms / 1e3, args.requests)
     )
-    pending = [
-        Request(
-            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
-            max_new_tokens=args.max_new_tokens,
+    requests = [
+        core.submit(
+            rng.integers(0, cfg.vocab_size, args.prompt_len),
+            SamplingParams(max_new_tokens=args.max_new_tokens),
+            priority=Priority.ONLINE,
             arrival_time=float(arrivals[i]),
-            online=True,
         )
         for i in range(args.requests)
     ]
-    done: list[Request] = []
-    while len(done) < args.requests:
-        now = engine.clock()
-        while pending and pending[0].arrival_time <= now and engine.free_slots():
-            engine.add_request(pending[0])
-            pending.pop(0)
-        if engine.num_active:
-            # fused sync-free microsteps; small k keeps admission responsive
-            done += engine.decode_loop(4 if not pending else 1)
-        else:
-            time.sleep(0.001)
-    lat = [r.finish_time - r.arrival_time for r in done]
-    total_tokens = sum(len(r.generated) for r in done)
+    while core.has_unfinished:
+        out = core.step()
+        if out.k == 0 and not out.admitted:
+            time.sleep(0.001)  # idle until the next arrival
+    lat = [r.finish_time - r.arrival_time for r in requests]
+    ttft = [r.first_token_time - r.arrival_time for r in requests]
+    total_tokens = sum(len(r.output_tokens) for r in requests)
     dt = time.monotonic() - t0
     print(
-        f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
+        f"[serve] {len(requests)} requests, {total_tokens} tokens in {dt:.2f}s "
         f"({total_tokens/dt:.1f} tok/s); latency p50={np.percentile(lat,50)*1e3:.1f}ms "
-        f"p95={np.percentile(lat,95)*1e3:.1f}ms"
+        f"p95={np.percentile(lat,95)*1e3:.1f}ms; "
+        f"ttft p95={np.percentile(ttft,95)*1e3:.1f}ms"
     )
 
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro import configs
@@ -80,7 +79,6 @@ def _train_collocated(args, cfg, trainer) -> None:
     speculative-filling runtime with a real inference engine."""
     from repro.core import SpecInFRuntime
     from repro.core.profiles import dp_profile
-    from repro.models import transformer as T
     from repro.serving.engine import InferenceEngine, Request
 
     params = trainer.state["params"]

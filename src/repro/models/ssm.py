@@ -45,7 +45,6 @@ def causal_conv_step(
     x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array | None
 ) -> tuple[jax.Array, jax.Array]:
     """One decode step.  x_t: [B, C]; conv_state: [B, K-1, C] (past inputs)."""
-    k = w.shape[0]
     window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B, K, C]
     out = jnp.einsum("bkc,kc->bc", window, w)
     if b is not None:
@@ -102,7 +101,6 @@ def selective_scan_chunked(
     from repro.kernels import ops  # local import avoids cycles
 
     b, s, di = xi.shape
-    ds = B_.shape[-1]
     nchunks = max(1, (s + chunk - 1) // chunk)
     pad = nchunks * chunk - s
     if pad:
@@ -243,7 +241,6 @@ def ssd_chunked(
     """Mamba2 SSD.  x: [B, S, nh, hp]; dt: [B, S, nh]; B_/C_: [B, S, ds];
     A: [nh] (negative); h0: [B, nh, hp, ds].  Returns (y, h_final)."""
     b, s, nh, hp = x.shape
-    ds = B_.shape[-1]
     nchunks = max(1, (s + chunk - 1) // chunk)
     pad = nchunks * chunk - s
     if pad:

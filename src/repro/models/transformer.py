@@ -19,7 +19,6 @@ cycle.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
@@ -639,7 +638,6 @@ def prefill(
     else:
         b, s, _ = inputs.shape
         x = inputs.astype(compute_dtype)
-    cache = init_cache(cfg, b, max_seq, cache_dtype)
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
                                   if a.dtype == jnp.float32 and a.ndim > 1 else a, t)

@@ -1,4 +1,33 @@
+from repro.serving.core import (
+    EngineCore,
+    EngineRequest,
+    Grant,
+    Priority,
+    PriorityPolicy,
+    RequestOutput,
+    RequestState,
+    SamplingParams,
+    SchedulerPolicy,
+    StepOutputs,
+    StepPlan,
+)
 from repro.serving.engine import InferenceEngine, Request
 from repro.serving.kv_pool import PagePool, RadixCache
 
-__all__ = ["InferenceEngine", "Request", "PagePool", "RadixCache"]
+__all__ = [
+    "EngineCore",
+    "EngineRequest",
+    "Grant",
+    "InferenceEngine",
+    "PagePool",
+    "Priority",
+    "PriorityPolicy",
+    "RadixCache",
+    "Request",
+    "RequestOutput",
+    "RequestState",
+    "SamplingParams",
+    "SchedulerPolicy",
+    "StepOutputs",
+    "StepPlan",
+]

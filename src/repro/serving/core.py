@@ -1,0 +1,681 @@
+r"""Request-lifecycle engine core (DESIGN.md §6).
+
+``EngineCore`` re-founds the serving surface around an iteration-level
+``step()``: every call is ONE scheduling quantum — consult a separable
+``SchedulerPolicy`` (admit / preempt / pick the k bucket and gamma), drive
+the engine's fused decode or speculative loop, and return ``StepOutputs``
+carrying per-request token deltas, TTFT stamps, and finish reasons.  The
+paper's headline guarantee (online p95 protected while offline work soaks
+up training bubbles) needs exactly this shape: an ONLINE arrival may
+*preempt* a RUNNING OFFLINE slot mid-flight instead of queueing behind it.
+
+Lifecycle::
+
+    WAITING --admit--> RUNNING --budget/horizon--> FINISHED_LENGTH
+       ^                  |    \--stop token-----> FINISHED_STOPPED
+       |                  |     \--abort()-------> FINISHED_ABORTED
+       +----<--preempt----+            (WAITING/PREEMPTED abort too)
+            (PREEMPTED)
+
+Preemption evicts the slot's KV pages back to the ``PagePool`` (the prompt's
+full pages stay radix-cached, so resume recomputes only the uncovered
+suffix via the existing prefix-hit path) and re-queues the request at the
+FRONT of its priority class.  Resume re-prefills ``prompt + generated`` and
+continues greedy decode — deterministic, so the resumed stream is
+byte-identical to an uninterrupted run (property-tested for dense + paged,
+spec on/off).
+
+The legacy ``InferenceEngine.add_request / decode_loop / spec_decode_loop``
+surface survives as a thin deprecated shim delegating to this core
+(``add_legacy`` / ``run_legacy``), so pre-existing callers and tests run
+unchanged through the new lifecycle.  ``scripts/check_api_surface.py``
+fails CI if the shim's signature drifts from the core's delegates.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import math
+from typing import Any, Callable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.serving.engine import DECODE_K_BUCKETS, InferenceEngine, Request
+
+__all__ = [
+    "EngineCore",
+    "Grant",
+    "Priority",
+    "PriorityPolicy",
+    "EngineRequest",
+    "RequestOutput",
+    "RequestState",
+    "SamplingParams",
+    "SchedulerPolicy",
+    "StepOutputs",
+    "StepPlan",
+    "largest_bucket",
+]
+
+
+class Priority(enum.Enum):
+    """Request class: ONLINE is latency-sensitive (may preempt), OFFLINE is
+    throughput work that soaks up spare capacity.  Replaces the old
+    ``Request.online`` bool on the new surface."""
+
+    ONLINE = "online"
+    OFFLINE = "offline"
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED_STOPPED = "finished_stopped"
+    FINISHED_LENGTH = "finished_length"
+    FINISHED_ABORTED = "finished_aborted"
+
+    @property
+    def finished(self) -> bool:
+        return self.name.startswith("FINISHED")
+
+
+#: finish_reason strings per terminal state (vLLM-style short names).
+FINISH_REASONS = {
+    RequestState.FINISHED_STOPPED: "stop",
+    RequestState.FINISHED_LENGTH: "length",
+    RequestState.FINISHED_ABORTED: "abort",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters.
+
+    The engine decodes greedily (argmax); ``stop_token_ids`` are checked
+    host-side after each fused loop, so a stop can land up to ``k - 1``
+    device microsteps late — the surplus tokens are trimmed from the
+    stream, never delivered."""
+
+    max_new_tokens: int = 16
+    stop_token_ids: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(eq=False)
+class EngineRequest:
+    """One request's lifecycle record.  ``output_tokens`` is the canonical
+    stream: it survives preemption/resume (the per-admission engine-side
+    ``Request`` only ever holds the tokens since the last admission).
+
+    ``eq=False``: requests compare by identity.  Field equality would make
+    queue membership tests compare ndarray prompts elementwise — two
+    same-prompt requests must still be distinct queue entries."""
+
+    prompt: np.ndarray  # [prompt_len] int32
+    sampling: SamplingParams
+    priority: Priority
+    request_id: int
+    arrival_time: float
+    state: RequestState = RequestState.WAITING
+    output_tokens: list = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    finish_reason: Optional[str] = None
+    preemptions: int = 0
+    # -- core internals --
+    _internal: Optional[Request] = None  # engine-side record while RUNNING
+    _consumed: int = 0  # tokens of _internal.generated already absorbed
+    _ttft_reported: bool = False
+
+    @property
+    def remaining_budget(self) -> int:
+        return self.sampling.max_new_tokens - len(self.output_tokens)
+
+
+@dataclasses.dataclass
+class Grant:
+    """One quantum's scheduling inputs (the Algorithm-1 decision, or the
+    permissive defaults for a dedicated serving engine).
+
+    ``tokens`` is the Kernel-Barrier grant metering OFFLINE work (online
+    execution is never token-metered, only its *admission* is gated by
+    ``online_ok``).  ``now`` gates arrivals; ``None`` reads the engine
+    clock.  ``max_cost_steps`` caps the quantum in microstep-equivalents
+    (the remaining bubble span).  ``advance_clock``, when set, is called
+    with the planned cost right before the fused loop runs, so
+    virtual-clock runtimes stamp retirements at quantum end."""
+
+    tokens: float = math.inf
+    online_ok: bool = True
+    phase: Any = None
+    now: Optional[float] = None
+    max_cost_steps: float = math.inf
+    advance_clock: Optional[Callable[[float], None]] = None
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """A SchedulerPolicy's decision for one quantum."""
+
+    admit: list = dataclasses.field(default_factory=list)  # EngineRequests
+    preempt: list = dataclasses.field(default_factory=list)  # slot indices
+    preempt_to_admit: bool = False  # may admission evict OFFLINE victims?
+    k: int = 0
+    gamma: Optional[int] = None  # None -> plain decode loop
+    cost_steps: float = 0.0  # quantum cost in microstep-equivalents
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Per-request delta for one step."""
+
+    request_id: int
+    priority: Priority
+    new_tokens: list
+    state: RequestState
+    finish_reason: Optional[str]
+    #: seconds from arrival to first token — set ONLY on the step that
+    #: produced the request's first output token, None afterwards.
+    ttft_s: Optional[float]
+
+
+@dataclasses.dataclass
+class StepOutputs:
+    outputs: list = dataclasses.field(default_factory=list)
+    finished: list = dataclasses.field(default_factory=list)  # EngineRequests
+    admitted: list = dataclasses.field(default_factory=list)  # request ids
+    preempted: list = dataclasses.field(default_factory=list)  # request ids
+    k: int = 0
+    gamma: Optional[int] = None
+    cost_steps: float = 0.0
+    spec_accepted: int = 0
+    spec_proposed: int = 0
+
+
+def largest_bucket(n: int, buckets: tuple = DECODE_K_BUCKETS) -> int:
+    """Largest compile bucket <= n, floored at the smallest bucket."""
+    best = buckets[0]
+    for b in buckets:
+        if b <= n:
+            best = b
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policies
+# ---------------------------------------------------------------------------
+
+
+class SchedulerPolicy:
+    """Separable scheduling brain ``EngineCore.step()`` consults.
+
+    Implementations decide admission order, preemption appetite, and the
+    quantum shape (k bucket, draft length gamma) from a ``Grant``; the core
+    executes the plan against the engine.  ``plan`` must not mutate core
+    state — failed admissions simply stay queued."""
+
+    def plan(self, core: "EngineCore", grant: Grant) -> StepPlan:
+        raise NotImplementedError
+
+    def pick_victim(
+        self, core: "EngineCore", for_request: EngineRequest
+    ) -> Optional[int]:
+        """Slot to evict so ``for_request`` can be admitted, or None.
+
+        Default: only an ONLINE admission may preempt, and the victim is
+        the RUNNING OFFLINE slot with the shortest total sequence — the
+        cheapest resume recompute (resume re-prefills prompt+generated)."""
+        if for_request.priority is not Priority.ONLINE:
+            return None
+        best = None
+        for slot, cr in core.slot_requests.items():
+            if cr.priority is not Priority.OFFLINE:
+                continue
+            cost = len(cr.prompt) + len(cr.output_tokens)
+            if best is None or cost < best[0]:
+                best = (cost, slot)
+        return None if best is None else best[1]
+
+    def observe(self, outputs: StepOutputs) -> None:
+        """Post-step feedback hook (e.g. acceptance EWMA updates)."""
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Priority-aware FCFS with preemption — the dedicated-serving default.
+
+    Admits every arrived ONLINE request first (evicting OFFLINE slots when
+    capacity blocks, if ``preemption``), then arrived OFFLINE requests
+    while the grant allows.  Picks a small k while requests are waiting
+    (admission stays responsive — the old serve loop's ``k=1`` heuristic),
+    the largest useful bucket otherwise."""
+
+    def __init__(
+        self,
+        *,
+        preemption: bool = True,
+        k_buckets: tuple = DECODE_K_BUCKETS,
+        gamma_ctrl=None,
+    ):
+        self.preemption = preemption
+        self.k_buckets = tuple(k_buckets)
+        self.gamma_ctrl = gamma_ctrl
+
+    def _gamma_ctrl_for(self, engine: InferenceEngine):
+        if self.gamma_ctrl is None and engine.spec_enabled:
+            from repro.spec.controller import AdaptiveGammaController
+
+            sc = engine.spec_cfg
+            self.gamma_ctrl = AdaptiveGammaController(
+                sc.gamma_buckets, ewma=sc.accept_ewma,
+                draft_cost_ratio=sc.draft_cost_ratio,
+            )
+        return self.gamma_ctrl
+
+    def plan(self, core: "EngineCore", grant: Grant) -> StepPlan:
+        admit = []
+        if grant.online_ok:
+            admit += [
+                cr for cr in core.waiting[Priority.ONLINE]
+                if cr.arrival_time <= grant.now
+            ]
+        if grant.tokens > 0:
+            admit += [
+                cr for cr in core.waiting[Priority.OFFLINE]
+                if cr.arrival_time <= grant.now
+            ]
+        running = list(core.slot_requests.values())
+        want = 0
+        for cr in running + admit:
+            want = max(want, cr.remaining_budget)
+        if want <= 0:
+            return StepPlan(admit=admit, preempt_to_admit=self.preemption)
+        leftover = sum(len(q) for q in core.waiting.values()) > len(admit)
+        steps = 1 if leftover else min(want, grant.max_cost_steps)
+        plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
+        ctrl = self._gamma_ctrl_for(core.engine)
+        if core.engine.spec_enabled and ctrl is not None:
+            g = ctrl.gamma_for(grant.phase if grant.phase is not None else "stable")
+            rounds = max(int(steps / ctrl.expected_tokens_per_round(g)), 1)
+            plan.k = largest_bucket(rounds, self.k_buckets)
+            plan.gamma = g
+            plan.cost_steps = plan.k * ctrl.round_cost_steps(g)
+        else:
+            plan.k = largest_bucket(int(steps), self.k_buckets)
+            plan.cost_steps = float(plan.k)
+        return plan
+
+    def observe(self, outputs: StepOutputs) -> None:
+        if self.gamma_ctrl is not None and outputs.spec_proposed:
+            self.gamma_ctrl.observe(outputs.spec_accepted, outputs.spec_proposed)
+
+
+# ---------------------------------------------------------------------------
+# EngineCore
+# ---------------------------------------------------------------------------
+
+
+class EngineCore:
+    """Iteration-level request-lifecycle core over an ``InferenceEngine``.
+
+    Owns the WAITING queues (one FIFO per priority class; preempted
+    requests resume from the front), the slot -> request map, and the
+    canonical per-request output streams.  All device compute still runs
+    through the engine's fused drive loops — the core only decides *what*
+    each quantum does."""
+
+    def __init__(
+        self,
+        engine: InferenceEngine,
+        policy: Optional[SchedulerPolicy] = None,
+    ):
+        self.engine = engine
+        # An engine has exactly ONE lifecycle core: retirements inside the
+        # fused loops notify ``engine._core``, so constructing a core binds
+        # it.  Rebinding while the old core still has unfinished requests
+        # (RUNNING slots or queued WAITING/PREEMPTED work) would orphan
+        # them in a queue nothing steps — refuse instead.
+        if engine._core is not None and engine._core.has_unfinished:
+            raise RuntimeError(
+                "engine already has a lifecycle core with unfinished "
+                "requests; drain it before attaching a new EngineCore"
+            )
+        engine._core = self
+        self.policy = policy or PriorityPolicy()
+        self.waiting: dict = {
+            Priority.ONLINE: collections.deque(),
+            Priority.OFFLINE: collections.deque(),
+        }
+        self.requests: dict = {}  # request_id -> EngineRequest
+        self.slot_requests: dict = {}  # slot index -> EngineRequest (RUNNING)
+        self.preemption_count = 0
+        self._finished_buffer: list = []
+
+    # ------------------------------------------------------------------
+    # Submission / queries
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        sampling: Optional[SamplingParams] = None,
+        *,
+        priority: Priority = Priority.OFFLINE,
+        arrival_time: Optional[float] = None,
+    ) -> EngineRequest:
+        """Queue a request (WAITING).  Raises ``ValueError`` when the
+        request could NEVER be admitted on this engine (prompt beyond
+        ``max_seq``, or worst-case page need beyond the whole pool) —
+        failing loudly at submission instead of starving the queue head."""
+        sampling = sampling or SamplingParams()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        probe = Request(prompt=prompt, max_new_tokens=sampling.max_new_tokens)
+        if not self.engine.request_fits(probe):
+            raise ValueError(
+                f"request can never be admitted on this engine "
+                f"(prompt {len(prompt)} tokens, "
+                f"max_new={sampling.max_new_tokens}, "
+                f"max_seq={self.engine.max_seq})"
+            )
+        if arrival_time is None:
+            arrival_time = self.engine.clock()
+        cr = EngineRequest(
+            prompt=prompt, sampling=sampling, priority=priority,
+            request_id=probe.request_id, arrival_time=arrival_time,
+        )
+        self.waiting[priority].append(cr)
+        self.requests[cr.request_id] = cr
+        return cr
+
+    def slot_of(self, req: EngineRequest) -> Optional[int]:
+        for slot, cr in self.slot_requests.items():
+            if cr is req:
+                return slot
+        return None
+
+    @property
+    def num_waiting(self) -> int:
+        return sum(len(q) for q in self.waiting.values())
+
+    @property
+    def has_unfinished(self) -> bool:
+        return bool(self.num_waiting or self.slot_requests)
+
+    # ------------------------------------------------------------------
+    # One scheduling quantum
+    # ------------------------------------------------------------------
+    def step(self, grant: Optional[Grant] = None) -> StepOutputs:
+        """Run ONE scheduling quantum: policy plan -> preempt -> admit ->
+        fused loop -> collect deltas/finishes."""
+        g = grant if grant is not None else Grant()
+        if g.now is None:
+            g = dataclasses.replace(g, now=self.engine.clock())
+        self._finished_buffer = []
+        active = list(self.slot_requests.values())
+        base = {cr.request_id: len(cr.output_tokens) for cr in active}
+        touched = {cr.request_id: cr for cr in active}
+        plan = self.policy.plan(self, g)
+        out = StepOutputs(k=0, gamma=None, cost_steps=0.0)
+        for slot in list(plan.preempt):
+            cr = self.preempt(slot)
+            if cr is not None:
+                out.preempted.append(cr.request_id)
+        for cr in plan.admit:
+            base.setdefault(cr.request_id, len(cr.output_tokens))
+            touched.setdefault(cr.request_id, cr)
+            if self._try_admit(
+                cr,
+                allow_preempt=plan.preempt_to_admit,
+                on_preempt=lambda victim: (
+                    out.preempted.append(victim.request_id),
+                    touched.setdefault(victim.request_id, victim),
+                ),
+            ):
+                out.admitted.append(cr.request_id)
+        k = plan.k if self.engine.num_active > 0 else 0
+        a0, p0 = self.engine.spec_accepted, self.engine.spec_drafted
+        if k > 0:
+            out.k, out.cost_steps = k, plan.cost_steps
+            if g.advance_clock is not None:
+                g.advance_clock(plan.cost_steps)
+            if plan.gamma is not None and self.engine.spec_enabled:
+                out.gamma = plan.gamma
+                self.engine._drive_spec_loop(k, plan.gamma)
+            else:
+                self.engine._drive_decode_loop(k)
+        out.spec_accepted = self.engine.spec_accepted - a0
+        out.spec_proposed = self.engine.spec_drafted - p0
+        for slot, cr in list(self.slot_requests.items()):
+            self._absorb_running(slot, cr)
+        out.finished = list(self._finished_buffer)
+        for cr in out.finished:
+            touched.setdefault(cr.request_id, cr)
+            base.setdefault(cr.request_id, 0)
+        for rid, cr in touched.items():
+            new = cr.output_tokens[base.get(rid, 0):]
+            ttft = None
+            if cr.first_token_time is not None and not cr._ttft_reported:
+                cr._ttft_reported = True
+                ttft = cr.first_token_time - cr.arrival_time
+            out.outputs.append(RequestOutput(
+                request_id=rid, priority=cr.priority, new_tokens=list(new),
+                state=cr.state, finish_reason=cr.finish_reason, ttft_s=ttft,
+            ))
+        self.policy.observe(out)
+        return out
+
+    # ------------------------------------------------------------------
+    def stream(
+        self, req: EngineRequest, grant: Optional[Grant] = None
+    ) -> Iterator[int]:
+        """Yield ``req``'s tokens as they are produced, driving ``step()``
+        (with ``grant``, or the permissive default) whenever the stream
+        runs dry.  Returns once the request reaches a terminal state."""
+        sent = 0
+        stalls = 0
+        while True:
+            while sent < len(req.output_tokens):
+                yield req.output_tokens[sent]
+                sent += 1
+            if req.state.finished:
+                return
+            out = self.step(grant)
+            if out.k == 0 and not out.admitted and not out.preempted:
+                stalls += 1
+                if stalls > 2:
+                    raise RuntimeError(
+                        f"stream stalled: request {req.request_id} is "
+                        f"{req.state.value} and the policy scheduled no work"
+                    )
+            else:
+                stalls = 0
+
+    # ------------------------------------------------------------------
+    def abort(self, req: EngineRequest) -> None:
+        """Terminal ABORT from any non-finished state.  A RUNNING request
+        is evicted immediately — its pages return to the pool and its
+        draft-cache slot state is reset (mid-decode abort never leaks)."""
+        if req.state.finished:
+            return
+        if req.state is RequestState.RUNNING:
+            slot = self.slot_of(req)
+            self._collect(req)
+            del self.slot_requests[slot]
+            self.engine.evict_slot(slot)
+            req._internal = None
+        else:
+            try:
+                self.waiting[req.priority].remove(req)
+            except ValueError:
+                pass
+        self._finish(req, RequestState.FINISHED_ABORTED, self.engine.clock())
+
+    # ------------------------------------------------------------------
+    def preempt(self, target: Union[int, EngineRequest]) -> Optional[EngineRequest]:
+        """Evict a RUNNING slot and re-queue its request (PREEMPTED) at the
+        front of its priority class.  Pages go back to the pool; the
+        radix-cached prompt pages survive, so resume recomputes only the
+        suffix.  Returns the preempted request (None if the slot is empty).
+        """
+        slot = target if isinstance(target, int) else self.slot_of(target)
+        cr = self.slot_requests.pop(slot, None) if slot is not None else None
+        if cr is None:
+            return None
+        new = self._collect(cr)
+        self.engine.evict_slot(slot)
+        cr._internal = None
+        if self._apply_stop(cr, new):
+            # the tail the eviction salvaged already carried a stop token
+            self._finish(cr, RequestState.FINISHED_STOPPED, self.engine.clock())
+            return cr
+        cr.state = RequestState.PREEMPTED
+        cr.preemptions += 1
+        self.preemption_count += 1
+        self.waiting[cr.priority].appendleft(cr)
+        return cr
+
+    # ------------------------------------------------------------------
+    # Legacy shim surface (InferenceEngine delegates here)
+    # ------------------------------------------------------------------
+    def add_legacy(self, req: Request) -> bool:
+        """Deprecated ``InferenceEngine.add_request`` contract: admit
+        ``req`` immediately (no queueing), returning False on capacity.
+        The request still joins the core lifecycle, so shim- and
+        core-driven streams share one bookkeeping path."""
+        if not self.engine._admit_request(req):
+            return False
+        cr = EngineRequest(
+            prompt=np.asarray(req.prompt, np.int32).reshape(-1),
+            sampling=SamplingParams(max_new_tokens=req.max_new_tokens),
+            priority=Priority.ONLINE if req.online else Priority.OFFLINE,
+            request_id=req.request_id,
+            arrival_time=req.arrival_time,
+            state=RequestState.RUNNING,
+        )
+        cr._internal = req
+        cr.first_token_time = req.first_token_time
+        slot = next(
+            i for i, r in enumerate(self.engine.slots) if r is req
+        )
+        self.slot_requests[slot] = cr
+        self.requests[cr.request_id] = cr
+        return True
+
+    def run_legacy(self, k: int, gamma: Optional[int] = None) -> list:
+        """Deprecated ``decode_loop`` / ``spec_decode_loop`` contract: run
+        exactly one fused loop (no admission, no preemption) and return the
+        engine-side ``Request`` records that finished."""
+        if self.engine.num_active == 0 or k <= 0:
+            return []
+        self._finished_buffer = []
+        if gamma is None:
+            finished = self.engine._drive_decode_loop(k)
+        else:
+            finished = self.engine._drive_spec_loop(k, gamma)
+        for slot, cr in list(self.slot_requests.items()):
+            self._absorb_running(slot, cr)
+        return finished
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _collect(self, cr: EngineRequest) -> list:
+        """Absorb tokens the engine produced since the last collection into
+        the canonical stream; returns just the new ones."""
+        gen = cr._internal.generated
+        new = [int(t) for t in gen[cr._consumed:]]
+        cr._consumed = len(gen)
+        cr.output_tokens.extend(new)
+        return new
+
+    def _apply_stop(self, cr: EngineRequest, new: list) -> bool:
+        """Host-side stop-token scan over this step's delta; trims the
+        stream past the first stop (stop token included)."""
+        stops = cr.sampling.stop_token_ids
+        if not stops:
+            return False
+        for j, t in enumerate(new):
+            if t in stops:
+                cut = len(cr.output_tokens) - len(new) + j + 1
+                del cr.output_tokens[cut:]
+                return True
+        return False
+
+    def _finish(
+        self, cr: EngineRequest, state: RequestState, now: float
+    ) -> None:
+        cr.state = state
+        cr.finish_reason = FINISH_REASONS[state]
+        cr.finish_time = now
+        self._finished_buffer.append(cr)
+
+    def _absorb_running(self, slot: int, cr: EngineRequest) -> None:
+        new = self._collect(cr)
+        if self._apply_stop(cr, new):
+            del self.slot_requests[slot]
+            self.engine.evict_slot(slot)
+            cr._internal = None
+            self._finish(cr, RequestState.FINISHED_STOPPED, self.engine.clock())
+
+    def _on_slot_finished(self, slot: int, internal: Request) -> None:
+        """Engine retirement callback (budget exhausted or max_seq horizon
+        reached) — also covers retirements driven through the legacy
+        ``decode_microstep`` path."""
+        cr = self.slot_requests.pop(slot, None)
+        if cr is None:
+            return
+        new = self._collect(cr)
+        cr._internal = None
+        state = (
+            RequestState.FINISHED_STOPPED
+            if self._apply_stop(cr, new) else RequestState.FINISHED_LENGTH
+        )
+        self._finish(cr, state, internal.finish_time)
+
+    def _try_admit(
+        self,
+        cr: EngineRequest,
+        *,
+        allow_preempt: bool = False,
+        on_preempt: Optional[Callable[[EngineRequest], Any]] = None,
+    ) -> bool:
+        """Admit ``cr`` (prefill into a slot), evicting policy-chosen
+        OFFLINE victims while admission fails and ``allow_preempt``.  On
+        failure the request simply stays where it was in its queue."""
+        if cr.remaining_budget <= 0:
+            # a preempted request whose budget was exactly exhausted
+            self.waiting[cr.priority].remove(cr)
+            self._finish(cr, RequestState.FINISHED_LENGTH, self.engine.clock())
+            return False
+        prompt = cr.prompt
+        if cr.output_tokens:
+            prompt = np.concatenate(
+                [prompt, np.asarray(cr.output_tokens, np.int32)]
+            )
+        internal = Request(
+            prompt=prompt, max_new_tokens=cr.remaining_budget,
+            arrival_time=cr.arrival_time,
+            online=cr.priority is Priority.ONLINE,
+        )
+        while not self.engine._admit_request(internal):
+            victim_slot = (
+                self.policy.pick_victim(self, cr) if allow_preempt else None
+            )
+            if victim_slot is None:
+                return False
+            victim = self.preempt(victim_slot)
+            if victim is not None and on_preempt is not None:
+                on_preempt(victim)
+        slot = next(
+            i for i, r in enumerate(self.engine.slots) if r is internal
+        )
+        self.slot_requests[slot] = cr
+        try:
+            self.waiting[cr.priority].remove(cr)
+        except ValueError:
+            pass  # legacy/externally-managed request not in a queue
+        cr._internal = internal
+        cr._consumed = 0
+        cr.state = RequestState.RUNNING
+        if cr.first_token_time is None:
+            cr.first_token_time = internal.first_token_time
+        return True

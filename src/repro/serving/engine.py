@@ -40,6 +40,16 @@ enables ``spec_decode_loop(k, gamma)`` — k fused draft-propose /
 chunk-verify rounds that emit up to ``gamma + 1`` *verified* tokens per slot
 per round under the same one-transfer-per-loop discipline.
 
+Lifecycle (DESIGN.md §6): the request-management surface now lives in
+``serving/core.py`` — ``EngineCore.step()`` with priority classes,
+preemption, and streaming outputs.  ``add_request`` / ``decode_loop`` /
+``spec_decode_loop`` remain as thin DEPRECATED shims delegating to the
+core (``scripts/check_api_surface.py`` pins them); the engine keeps only
+the compute primitives: ``_admit_request`` (one prefill microstep into a
+free slot), ``_drive_decode_loop`` / ``_drive_spec_loop`` (the fused
+device loops), and ``evict_slot`` (release a slot's pages and cache
+indices WITHOUT finishing — the preempt/abort path).
+
 Timebase: all request timestamps come from ONE clock chosen at construction
 (``clock=``, default ``time.monotonic``).  Collocated runtimes rebind it to
 their virtual clock so latencies never mix timebases.  Offline requests
@@ -171,6 +181,7 @@ class InferenceEngine:
             cache = T.init_cache(cfg, max_slots, max_seq, compute_dtype)
             cache["index"] = jnp.zeros((max_slots,), jnp.int32)
         self.cache = cache
+        self._core = None  # lazily-built EngineCore (the .core property)
         self.slots: list[Optional[Request]] = [None] * max_slots
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.steps_executed = 0
@@ -413,13 +424,19 @@ class InferenceEngine:
         self._bt_host[i, keep: keep + len(drop)] = 0
         self._bt_dirty = True
 
-    def _retire_slot(self, i: int, now: float) -> Request:
-        """Single retirement path for decode_loop / spec_decode_loop /
-        decode_microstep: releases the slot's pages (paged) and resets BOTH
-        cache indices — the draft index too, which the plain-loop paths
-        previously left stale for the next occupant of the slot."""
+    def evict_slot(self, i: int, sync: bool = True) -> Request:
+        """Release slot ``i``'s resources — pages back to the pool, BOTH
+        cache indices reset (the draft index too, which the plain-loop
+        paths previously left stale) — WITHOUT finishing the request.
+
+        This is the preempt/abort primitive: the request keeps its
+        generated tokens and may be re-admitted later (resume re-prefills
+        ``prompt + generated``; the radix tree still holds the prompt's
+        full pages, so a paged resume recomputes only the suffix).
+        ``sync=False`` defers the block-table upload to the caller's sweep
+        (the retirement paths batch one upload over all evictions)."""
         req = self.slots[i]
-        req.finish_time = now
+        assert req is not None, f"evict of empty slot {i}"
         self.slots[i] = None
         self.cache["index"] = self.cache["index"].at[i].set(0)
         if self.spec_enabled:
@@ -434,8 +451,20 @@ class InferenceEngine:
             self._slot_idx[i] = 0
             self._slot_horizon[i] = 0
             self._bt_host[i] = 0
-            # mirror-only: the retirement sweep syncs once for all slots
             self._bt_dirty = True
+            if sync:
+                self._sync_block_tables()
+        return req
+
+    def _retire_slot(self, i: int, now: float) -> Request:
+        """Single retirement path for the fused loops and
+        ``decode_microstep``: evict the slot, stamp the finish time, and
+        notify the lifecycle core (if one is attached) so the request's
+        state machine advances to FINISHED."""
+        req = self.evict_slot(i, sync=False)
+        req.finish_time = now
+        if self._core is not None:
+            self._core._on_slot_finished(i, req)
         return req
 
     # ------------------------------------------------------------------
@@ -531,7 +560,42 @@ class InferenceEngine:
         return tok
 
     # ------------------------------------------------------------------
+    # Lifecycle core + deprecated shim surface
+    # ------------------------------------------------------------------
+    @property
+    def core(self):
+        """The engine's lazily-built ``EngineCore`` (serving/core.py) — the
+        request-lifecycle surface (``submit``/``step``/``stream``/``abort``)
+        all public admission and decode now routes through."""
+        if self._core is None:
+            from repro.serving.core import EngineCore
+
+            self._core = EngineCore(self)
+        return self._core
+
     def add_request(self, req: Request) -> bool:
+        """DEPRECATED shim — delegates to ``EngineCore.add_legacy``.
+
+        Prefer ``engine.core.submit(prompt, SamplingParams(...),
+        priority=...)``: queued admission with priority classes, preemption,
+        and streaming outputs.  This shim admits immediately (no queueing)
+        and returns False on capacity, the historical contract."""
+        return self.core.add_legacy(req)
+
+    def decode_loop(self, k: int) -> list[Request]:
+        """DEPRECATED shim — delegates to ``EngineCore.run_legacy``: one
+        fused plain-decode loop, returning the requests that finished.
+        Prefer ``engine.core.step(grant)``."""
+        return self.core.run_legacy(k)
+
+    def spec_decode_loop(self, k: int, gamma: int) -> list[Request]:
+        """DEPRECATED shim — delegates to ``EngineCore.run_legacy``: one
+        fused speculative loop, returning the requests that finished.
+        Prefer ``engine.core.step(grant)``."""
+        return self.core.run_legacy(k, gamma=gamma)
+
+    # ------------------------------------------------------------------
+    def _admit_request(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot.  One engine microstep.
 
         Returns False when no slot is free — or, on paged engines, when the
@@ -571,7 +635,7 @@ class InferenceEngine:
         return True
 
     # ------------------------------------------------------------------
-    def decode_loop(self, k: int) -> list[Request]:
+    def _drive_decode_loop(self, k: int) -> list[Request]:
         """Run ``k`` fused decode microsteps on-device; returns requests that
         finished.  One device->host transfer total, regardless of ``k``.
 
@@ -614,7 +678,7 @@ class InferenceEngine:
         return finished
 
     # ------------------------------------------------------------------
-    def spec_decode_loop(self, k: int, gamma: int) -> list[Request]:
+    def _drive_spec_loop(self, k: int, gamma: int) -> list[Request]:
         """Run ``k`` fused speculative rounds (draft-propose + chunk-verify);
         returns requests that finished.  One device->host transfer total.
 

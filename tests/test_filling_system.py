@@ -95,6 +95,41 @@ def test_runtime_serves_online_within_bubbles(tiny):
     metrics = rt.run(num_iterations=14)
     assert metrics.online_served >= 3
     assert np.isfinite(metrics.p95_latency_s())
+    # TTFT is recorded per served online request (arrival -> first token)
+    # and can never exceed the end-to-end latency it is a prefix of
+    assert len(metrics.online_ttft_s) >= metrics.online_served
+    assert np.isfinite(metrics.p95_ttft_s())
+    assert all(t >= 0.0 for t in metrics.online_ttft_s)
+
+
+def test_preempted_legacy_offline_resumes_on_virtual_clock(tiny):
+    """Regression: a request admitted via the legacy shim BEFORE the
+    runtime exists is stamped on the wall clock; after an online arrival
+    preempts it, re-admission is gated on the virtual clock — the runtime
+    must restamp RUNNING slots to the virtual epoch or the offline request
+    starves forever."""
+    import itertools
+
+    cfg, params = tiny
+    engine = InferenceEngine(cfg, params, max_slots=1, max_seq=64)
+    off = Request(prompt=np.arange(8), max_new_tokens=12)
+    assert engine.add_request(off)  # wall-clock arrival stamp
+    rt = SpecInFRuntime(
+        train_step=lambda s, b: (s, {"loss": 0.0}), train_state=None,
+        batch_iter=itertools.repeat({}),
+        profile=dp_profile("tiny", compute_s=0.03, comm_s=0.06),
+        engine=engine,
+        online_requests=[Request(prompt=np.arange(4), max_new_tokens=2,
+                                 arrival_time=0.01, online=True)],
+        cfg=SpecInFConfig(busy_hold_ms=5.0), decode_microstep_s=0.002,
+    )
+    metrics = rt.run(num_iterations=25)
+    assert metrics.online_served == 1
+    assert metrics.preemptions >= 1, "online must preempt the lone slot"
+    cr_off = engine.core.requests[off.request_id]
+    assert cr_off.state.finished, "preempted offline request starved"
+    assert len(cr_off.output_tokens) == 12
+    assert not engine.core.has_unfinished
 
 
 def test_fused_collocated_step_preserves_training(tiny):
@@ -102,7 +137,6 @@ def test_fused_collocated_step_preserves_training(tiny):
     unfused train step, and the decode chain must advance the cache."""
     cfg, params = tiny
     tcfg = TrainConfig(learning_rate=1e-2)
-    sched = make_schedule(tcfg)
 
     def train_step(state, batch):
         def loss_fn(p):

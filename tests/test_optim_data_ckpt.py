@@ -1,7 +1,6 @@
 """Optimizer, data-pipeline, and checkpointing substrate tests."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -125,7 +124,6 @@ def test_data_labels_are_shifted_inputs():
 
 
 def test_data_host_sharding_partitions_global_batch():
-    full = _ds(host_index=0, host_count=1).next_batch()
     h0 = _ds(host_index=0, host_count=2)
     h1 = _ds(host_index=1, host_count=2)
     assert h0.local_batch == 4 and h1.local_batch == 4

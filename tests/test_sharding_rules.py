@@ -8,12 +8,10 @@ device_puts here.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.configs.base import TrainConfig
 from repro.runtime import sharding as S
 from repro.runtime.step import abstract_cache, abstract_params
 

@@ -1,7 +1,6 @@
 """Calibrated-timeline simulator tests: the paper's §5.2 orderings must hold
 on every parallel mode (these are the claims EXPERIMENTS.md §Paper-fidelity
 reports against Fig. 4/5/6/7)."""
-import numpy as np
 import pytest
 
 from repro.configs.base import SpecInFConfig
@@ -141,3 +140,33 @@ def test_pp_gains_are_marginal():
     )
     assert pp_gain < dp_gain
     assert pp_gain < 2.0, "PP advantage should be marginal (comparable to MPS)"
+
+
+def test_queue_pull_is_priority_aware():
+    """Regression: an online arrival must never wait behind the offline
+    queue head.  The old strictly-FIFO pull handed out the earlier-arrived
+    offline request first; priority-aware pull serves the online request
+    the moment it is visible, while offline order stays FIFO."""
+    from repro.core.queues import SimRequest
+
+    reqs = [
+        SimRequest(arrival_s=0.0, service_s=1.0, request_id=0, online=False),
+        SimRequest(arrival_s=0.1, service_s=1.0, request_id=1, online=False),
+        SimRequest(arrival_s=0.2, service_s=0.1, request_id=2, online=True),
+    ]
+    q = RequestQueue(reqs)
+    assert q.pull(0.05).request_id == 0  # only the offline head has arrived
+    assert q.available(0.25) == 2
+    assert q.pull(0.25).request_id == 2, "online must jump the offline head"
+    assert q.pull(0.25).request_id == 1
+    assert q.pull(0.25) is None and q.remaining == 0
+
+
+def test_queue_pull_fifo_within_class():
+    qs = poisson_arrivals(mean_interval_s=0.1, num_requests=5,
+                          service_s=0.1, online=True)
+    q = RequestQueue(qs)
+    ids = []
+    while (r := q.pull(10.0)) is not None:
+        ids.append(r.request_id)
+    assert ids == sorted(ids), "pull must stay FIFO inside a priority class"
