@@ -70,21 +70,31 @@ def bench_engine_microstep():
 
 def bench_prefill_buckets():
     """Prefill compile-cache control: 20 distinct prompt lengths through the
-    power-of-two buckets must compile a handful of programs, where the seed
-    engine compiled one per distinct length."""
+    power-of-two buckets compile a handful of programs (the seed engine
+    compiled one per distinct length); unified chunked prefill collapses
+    them further to ONE fixed-width program regardless of the prompt-length
+    distribution (``scripts/check_bench_regression.py`` gates it)."""
     cfg = configs.smoke_config("qwen3-1.7b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=128)
+    # prefill_chunk=0 pins the historical bucketed rows' meaning
+    engine = InferenceEngine(cfg, params, max_slots=4, max_seq=128,
+                             prefill_chunk=0)
+    chunked = InferenceEngine(cfg, params, max_slots=4, max_seq=128)
     lengths = list(range(3, 23))  # 20 distinct prompt lengths
     for n in lengths:
         # benchmark measures prefill compiles only; recycle the slots freely
-        engine.slots = [None] * engine.max_slots
-        engine.add_request(Request(prompt=np.arange(n), max_new_tokens=1))
+        for eng in (engine, chunked):
+            eng.slots = [None] * eng.max_slots
+            eng._prefill_left = [None] * eng.max_slots
+            eng._draft_prefill_left = [None] * eng.max_slots
+            eng.add_request(Request(prompt=np.arange(n), max_new_tokens=1))
     return [
         ("micro", "prefill:compiled_programs_20_lengths", "bucketed",
          "count", engine.prefill_compile_count),
         ("micro", "prefill:compiled_programs_20_lengths", "seed_equiv",
          "count", len(set(lengths))),
+        ("micro", "prefill:compiled_programs_20_lengths", "chunked",
+         "count", chunked.prefill_compile_count),
     ]
 
 
@@ -339,6 +349,107 @@ def bench_engine_core(num_online=10, offline_budget=48):
     return rows
 
 
+def bench_chunked_prefill(num_online=12, budget=32, plen=160):
+    """Chunked vs monolithic prefill under mixed load through the unified
+    token-budget step (DESIGN.md §7) — the acceptance evidence that
+    splitting prompts into chunks bounds worst-case step time (so bubble
+    grants can never be overrun by a long prompt) and cuts TTFT-under-load
+    for online requests queueing behind long admissions.
+
+    Workload: a churn of long-prompt OFFLINE requests (160 tokens each —
+    the work whose admission monopolizes a monolithic step) collocated
+    with short-prompt ONLINE arrivals, on a virtual clock (one microstep
+    == 2 ms, prefill priced at the profiled per-token cost) so the
+    comparison is deterministic: identical arrivals, prompts, and budgets;
+    the ONLY difference is whether a long admission runs as one monolithic
+    dispatch (one step consumes 160+ tokens, blowing through the 32-token
+    grant and stalling every online arrival behind it) or streams as
+    budgeted chunks (no step's mixed batch — prefill chunk tokens plus
+    generated tokens — ever exceeds the grant).  The wall-clock worst-step
+    rows are informational (they include first-compile steps); the CI gate
+    reads the deterministic token ceilings and the TTFT pair
+    (``scripts/check_bench_regression.py``)."""
+    from repro.serving.core import (
+        EngineCore, Grant, Priority, PriorityPolicy, SamplingParams,
+    )
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    step_s = 0.002
+    ptc = 1.0 / 16.0  # profiled: one 16-token chunk ~ one decode microstep
+    rows = [("micro", "chunked:granted_token_budget(mixed_load)", "grant",
+             "tokens", budget)]
+
+    def run(chunk):
+        vnow = [0.0]
+        engine = InferenceEngine(
+            cfg, params, max_slots=2, max_seq=256, clock=lambda: vnow[0],
+            prefill_chunk=chunk,
+        )
+        core = EngineCore(engine, policy=PriorityPolicy(
+            prefill_token_cost_steps=ptc,
+        ))
+        rng = np.random.default_rng(0)
+        for i in range(6):  # long-prompt offline churn (distinct prompts)
+            core.submit(
+                rng.integers(0, cfg.vocab_size, plen),
+                SamplingParams(max_new_tokens=12),
+                priority=Priority.OFFLINE, arrival_time=0.0,
+            )
+        arrivals = np.cumsum(rng.exponential(0.02, num_online))
+        online = [
+            core.submit(
+                rng.integers(0, cfg.vocab_size, 8),
+                SamplingParams(max_new_tokens=4),
+                priority=Priority.ONLINE, arrival_time=float(t),
+            )
+            for t in arrivals
+        ]
+        max_step_tokens, worst_wall_ms, worst_cost_ms = 0, 0.0, 0.0
+        while core.has_unfinished:
+            g0 = engine.generated_tokens_total
+            t0 = time.perf_counter()
+            out = core.step(Grant(
+                now=vnow[0], token_budget=budget,
+                advance_clock=lambda steps: vnow.__setitem__(
+                    0, vnow[0] + steps * step_s
+                ),
+            ))
+            wall = (time.perf_counter() - t0) * 1e3
+            step_tokens = out.prefill_tokens + (
+                engine.generated_tokens_total - g0
+            )
+            max_step_tokens = max(max_step_tokens, step_tokens)
+            worst_wall_ms = max(worst_wall_ms, wall)
+            worst_cost_ms = max(worst_cost_ms, out.cost_steps * step_s * 1e3)
+            if out.cost_steps == 0 and not out.admitted:
+                vnow[0] += step_s  # idle until the next arrival
+        assert all(r.state.finished for r in online)
+        lat = [r.finish_time - r.arrival_time for r in online]
+        ttft = [r.first_token_time - r.arrival_time for r in online]
+        return (
+            float(np.percentile(ttft, 95)), float(np.percentile(lat, 95)),
+            max_step_tokens, worst_cost_ms, worst_wall_ms, engine,
+        )
+
+    for policy, chunk in (("chunked", None), ("monolithic", 0)):
+        ttft95, p95, max_tokens, cost_ms, wall_ms, engine = run(chunk)
+        rows.append(("micro", "chunked:online_ttft_p95_ms(mixed_load)",
+                     policy, "ms", round(ttft95 * 1e3, 2)))
+        rows.append(("micro", "chunked:online_p95_ms(mixed_load)", policy,
+                     "ms", round(p95 * 1e3, 2)))
+        rows.append(("micro", "chunked:max_step_tokens(mixed_load)", policy,
+                     "tokens", max_tokens))
+        rows.append(("micro", "chunked:max_step_cost_ms(mixed_load)", policy,
+                     "ms", round(cost_ms, 2)))
+        rows.append(("micro", "chunked:worst_step_wall_ms(mixed_load)",
+                     policy, "ms", round(wall_ms, 2)))
+        if policy == "chunked":
+            rows.append(("micro", "prefill:chunked_compiled_programs",
+                         "chunked", "count", engine.prefill_compile_count))
+    return rows
+
+
 def bench_control_plane():
     """Monitor + Algorithm 1 cost per 2ms window — must be tiny vs the
     window itself for the ~1% overhead claim to hold."""
@@ -368,5 +479,6 @@ def all_rows():
         + bench_spec_decode()
         + bench_paged_kv()
         + bench_engine_core()
+        + bench_chunked_prefill()
         + bench_control_plane()
     )

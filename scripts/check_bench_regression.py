@@ -1,5 +1,6 @@
-"""CI gate: paged decode throughput must stay within 10% of dense, and
-preemption must protect online p95 under mixed load.
+"""CI gate: paged decode throughput must stay within 10% of dense,
+preemption must protect online p95 under mixed load, and chunked prefill
+must honor the unified step's token budget.
 
 Reads the ``paged:*_tokens_per_s(k=8)`` rows ``benchmarks/engine_micro.py``
 just wrote to BENCH_engine.json (same process conditions, measured
@@ -7,6 +8,18 @@ back-to-back) and fails the job on a >10% decode-throughput regression of
 the paged KV path vs the dense layout at equal batch.  Also checks the
 ``core:online_p95_ms(mixed_load)`` pair (virtual-clock, deterministic):
 online p95 with preemption enabled must be <= online p95 without it.
+
+Chunked-prefill gates (DESIGN.md §7; all read deterministic virtual-clock
+rows, so they are exact, not noise-tolerant):
+
+* no chunked step's mixed batch (prefill chunk tokens + generated tokens)
+  exceeds the granted token budget — the step-time-ceiling guarantee that
+  makes SpecInF bubble grants honest;
+* the monolithic comparison row DOES exceed it (the overrun being fixed —
+  if it stops overrunning, the benchmark workload has gone stale);
+* chunked online TTFT p95 under mixed load <= monolithic's;
+* unified chunked prefill compiles a small constant number of prefill
+  programs (one fixed-width program per model).
 
     python scripts/check_bench_regression.py [BENCH_engine.json]
 """
@@ -16,6 +29,7 @@ import json
 import sys
 
 THRESHOLD = 0.90  # paged must reach >= 90% of dense tokens/s
+MAX_CHUNKED_PREFILL_PROGRAMS = 2  # target (+ draft when spec is paired)
 
 
 def main() -> int:
@@ -46,6 +60,44 @@ def main() -> int:
           f"no-preempt {nopre:.2f} ms")
     if pre > nopre:
         print("FAIL: preemption made online p95 WORSE under mixed load")
+        return 1
+
+    # --- chunked-prefill unified-step gates (deterministic rows) -------
+    budget = vals.get("chunked:granted_token_budget(mixed_load)")
+    c_max = by_policy.get(("chunked:max_step_tokens(mixed_load)", "chunked"))
+    m_max = by_policy.get(
+        ("chunked:max_step_tokens(mixed_load)", "monolithic")
+    )
+    c_ttft = by_policy.get(
+        ("chunked:online_ttft_p95_ms(mixed_load)", "chunked")
+    )
+    m_ttft = by_policy.get(
+        ("chunked:online_ttft_p95_ms(mixed_load)", "monolithic")
+    )
+    programs = by_policy.get(("prefill:chunked_compiled_programs", "chunked"))
+    if None in (budget, c_max, m_max, c_ttft, m_ttft, programs):
+        print(f"check_bench_regression: chunked-prefill rows missing from "
+              f"{path}")
+        return 1
+    print(f"step token ceiling: chunked {c_max} vs monolithic {m_max} "
+          f"(grant {budget}); TTFT p95 chunked {c_ttft:.2f} ms vs "
+          f"monolithic {m_ttft:.2f} ms; {programs} chunked prefill programs")
+    if c_max > budget:
+        print("FAIL: a chunked step's mixed batch exceeded its granted "
+              "token budget")
+        return 1
+    if m_max <= budget:
+        print("FAIL: the monolithic row no longer overruns the grant — the "
+              "mixed-load workload has gone stale")
+        return 1
+    if c_ttft > m_ttft:
+        print("FAIL: chunked prefill made online TTFT p95 WORSE under "
+              "mixed load")
+        return 1
+    if programs > MAX_CHUNKED_PREFILL_PROGRAMS:
+        print(f"FAIL: chunked prefill compiled {programs} programs "
+              f"(> {MAX_CHUNKED_PREFILL_PROGRAMS}) — the one-program "
+              "contract regressed")
         return 1
     print("OK")
     return 0

@@ -296,6 +296,23 @@ class SpecInFConfig:
     hbm_limit_bytes: int = 16 * 1024**3  # v5e HBM (Principle-I budget)
     max_instances: int = 8
 
+    # --- unified token-budget step (chunked prefill, DESIGN.md §7) ---
+    #: Cap on the tokens one fused engine step may consume — decode tokens
+    #: (1/slot), spec-verify chunks (gamma+1/slot), and prefill chunk
+    #: tokens together.  0 = unmetered (steps sized by the bubble room
+    #: alone).  With chunked prefill this bounds worst-case step latency:
+    #: a long prompt streams across steps instead of monopolizing one.
+    step_token_budget: float = 0.0
+    #: Profiled per-prefill-token step cost in microstep-equivalents (one
+    #: microstep == ``decode_microstep_s``).  ``SpecInFPolicy`` uses it to
+    #: convert a bubble window into a prefill token budget, so a grant can
+    #: never be overrun by a long prompt.  0 keeps prefill free in the
+    #: cost model (the pre-§7 behavior).  The engine-side chunk width is
+    #: the ``InferenceEngine(prefill_chunk=...)`` knob: None -> auto
+    #: (DEFAULT_PREFILL_CHUNK for attention families), 0 -> monolithic
+    #: bucket prefill.
+    prefill_token_cost_steps: float = 0.0
+
 
 # ---------------------------------------------------------------------------
 # Speculative decoding (draft / target pairing)

@@ -32,6 +32,7 @@ shape.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -108,11 +109,17 @@ class SpecInFPolicy(SchedulerPolicy):
         microstep_tokens: float = 1.0,
         gamma_ctrl: Optional[AdaptiveGammaController] = None,
         preemption: bool = True,
+        prefill_token_cost_steps: float = 0.0,
     ):
         #: Kernel-Barrier token cost of one plain microstep (1 token/ms).
         self.microstep_tokens = microstep_tokens
         self.gamma_ctrl = gamma_ctrl
         self.preemption = preemption
+        #: profiled per-prefill-token step cost in microstep-equivalents
+        #: (DESIGN.md §7): converts a bubble window into a prefill token
+        #: budget, so a grant can never be overrun by a long prompt.  0
+        #: keeps prefill free in the cost model (the historical behavior).
+        self.prefill_token_cost_steps = prefill_token_cost_steps
 
     def _spec(self, core) -> bool:
         return core.engine.spec_enabled and self.gamma_ctrl is not None
@@ -158,6 +165,12 @@ class SpecInFPolicy(SchedulerPolicy):
                     steps = int(grant.tokens // self.microstep_tokens)
                     plan.k = largest_bucket(min(steps, room))
                     plan.cost_steps = float(plan.k)
+        # unified token-budget step (DESIGN.md §7): clamp decode rounds to
+        # the grant's token budget, then spend what remains — of both the
+        # budget and the bubble room, priced at the profiled per-token
+        # cost — on streaming prefill chunks
+        decode_tokens = self._clamp_k_to_budget(plan, core, grant)
+        self.plan_prefill(core, grant, plan, decode_tokens)
         return plan
 
     def _size_quantum(self, plan, core, grant, want_tokens: float) -> None:
@@ -240,6 +253,7 @@ class SpecInFRuntime:
             self.core.policy = SpecInFPolicy(
                 microstep_tokens=decode_microstep_s / 1e-3,
                 gamma_ctrl=self.gamma_ctrl,
+                prefill_token_cost_steps=cfg.prefill_token_cost_steps,
             )
             # Requests submitted/admitted before this point were stamped on
             # the engine's OLD clock (usually wall time).  Restamp them to
@@ -315,6 +329,7 @@ class SpecInFRuntime:
                 phase=d.phase,
                 now=base,
                 max_cost_steps=max((bubble_s - spent) / step_cost, 1.0),
+                token_budget=self.cfg.step_token_budget or math.inf,
                 # retirement stamps land at quantum END: the core advances
                 # the clock once the plan's cost is known, before the loop
                 advance_clock=lambda steps, _b=base: setattr(

@@ -163,6 +163,69 @@ def verify_attention(
     raise ValueError(f"unknown verify attention impl {impl!r}")
 
 
+def prefill_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    starts: jax.Array,
+    chunk_lens: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Ragged chunked-prefill attention over a dense KV cache.
+
+    q: [B, C, H, hd] — one fixed-width prefill chunk per slot; k/v_cache:
+    [B, S_max, kvH, hd] with the chunk's *real* K/V already written at
+    positions ``starts .. starts + chunk_lens - 1``; starts: [B] int32
+    per-slot prefill progress (KV entries before the chunk); chunk_lens:
+    [B] int32 real tokens per chunk (ragged; 0 == frozen slot).  Chunk
+    query t attends ``kpos <= starts + t`` — the previously-written prefix
+    plus the chunk's own causal triangle.  Returns [B, C, H, hd]; rows
+    ``t >= chunk_lens`` return zeros.
+
+    ``impl``:
+      * "auto"   -- pallas on TPU, xla elsewhere
+      * "xla"    -- chunk-causal masked dense attention over S_max
+      * "pallas" -- ragged prefill kernel (interpret=True automatically
+                    off-TPU)
+    """
+    from repro.models import layers as L
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        b, c, h, hd = q.shape
+        s_max = k_cache.shape[1]
+        kk = L._repeat_kv(k_cache.astype(q.dtype), h)
+        vv = L._repeat_kv(v_cache.astype(q.dtype), h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+        scores = scores * hd**-0.5
+        kpos = jnp.arange(s_max)
+        bound = starts[:, None] + jnp.arange(c)[None, :]  # [B, C]
+        valid = jnp.arange(c)[None, :] < chunk_lens[:, None]  # [B, C]
+        mask = (kpos[None, None, :] <= bound[:, :, None]) & valid[:, :, None]
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        # pad rows (t >= chunk_lens, frozen slots included) are uniform
+        # softmax garbage; zero them to match the kernel's defined output
+        return jnp.where(valid[:, :, None, None], out, 0.0)
+    if impl == "pallas":
+        from repro.kernels.prefill_attention import (
+            prefill_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            starts,
+            chunk_lens,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown prefill chunk attention impl {impl!r}")
+
+
 def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     """Materialize a paged pool into its per-slot dense layout.
 
@@ -268,6 +331,54 @@ def paged_verify_attention(
             interpret=not _on_tpu(),
         )
     raise ValueError(f"unknown paged verify attention impl {impl!r}")
+
+
+def paged_prefill_chunk_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    starts: jax.Array,
+    chunk_lens: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Ragged chunked-prefill attention over the paged KV pool.
+
+    q: [B, C, H, hd] — one fixed-width prefill chunk per slot, whose real
+    K/V has already been scattered into the slot's pages at positions
+    ``starts .. starts + chunk_lens - 1``; k/v_pool: [P, page, kvH, hd];
+    block_tables: [B, W] int32; starts / chunk_lens: [B] int32 as in
+    ``prefill_chunk_attention``.  Returns [B, C, H, hd].
+
+    ``impl``: same semantics as ``paged_decode_attention``.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return prefill_chunk_attention(
+            q,
+            _gather_pages(k_pool, block_tables),
+            _gather_pages(v_pool, block_tables),
+            starts,
+            chunk_lens,
+            impl="xla",
+        )
+    if impl == "pallas":
+        from repro.kernels.paged_prefill_attention import (
+            paged_prefill_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_pool.astype(q.dtype),
+            v_pool.astype(q.dtype),
+            block_tables,
+            starts,
+            chunk_lens,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown paged prefill chunk attention impl {impl!r}")
 
 
 def ssm_scan_chunk(xi, dt, B_, C_, A, h0):

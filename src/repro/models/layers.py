@@ -344,6 +344,58 @@ def attention_verify(
     return y, (k_cache, v_cache)
 
 
+def attention_prefill_chunk(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    kv_cache: tuple[jax.Array, jax.Array],
+    cache_index: jax.Array,
+    chunk_lens: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Chunked-prefill step (dense cache): C prompt tokens per slot in one
+    pass.
+
+    x: [B, C, d] — one fixed-width prefill chunk per slot, zero-padded past
+    ``chunk_lens``; cache k/v: [B, S_max, kvH, hd]; cache_index: [B] int32
+    per-slot prefill progress; chunk_lens: [B] int32 real tokens per chunk
+    (0 == frozen slot).  Writes the chunk's *real* K/V at positions
+    ``index .. index + chunk_lens - 1`` — pad rows scatter out of bounds
+    and are DROPPED, so a chunk near the sequence horizon can never clamp
+    onto (and corrupt) live entries — then attends each real row to the
+    prefix plus the chunk's own causal triangle
+    (``ops.prefill_chunk_attention``)."""
+    b, c, _ = x.shape
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    positions = idx[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    k_cache, v_cache = kv_cache
+    s_max = k_cache.shape[1]
+    valid = jnp.arange(c)[None, :] < chunk_lens[:, None]  # [B, C]
+    pos_w = jnp.where(valid, positions, s_max)  # out of bounds -> dropped
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, c))
+    k_cache = k_cache.at[rows, pos_w].set(
+        k_new.astype(k_cache.dtype), mode="drop"
+    )
+    v_cache = v_cache.at[rows, pos_w].set(
+        v_new.astype(v_cache.dtype), mode="drop"
+    )
+    from repro.kernels import ops  # local import to avoid cycles
+
+    out = shard(
+        ops.prefill_chunk_attention(
+            q, k_cache, v_cache, idx, chunk_lens, impl=impl
+        ),
+        "bthd",
+    )
+    mask = head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "btd")
+    return y, (k_cache, v_cache)
+
+
 def paged_kv_write(
     pool: jax.Array,
     new: jax.Array,
@@ -436,6 +488,54 @@ def attention_verify_paged(
     out = shard(
         ops.paged_verify_attention(
             q, k_pool, v_pool, block_tables, idx + t, impl=impl
+        ),
+        "bthd",
+    )
+    mask = head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "btd")
+    return y, (k_pool, v_pool)
+
+
+def attention_prefill_chunk_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    kv_pool: tuple[jax.Array, jax.Array],
+    block_tables: jax.Array,
+    cache_index: jax.Array,
+    chunk_lens: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Chunked-prefill step against the paged KV pool.
+
+    x: [B, C, d] chunk embeddings; the chunk's *real* K/V scatters into the
+    slot's pages at logical positions ``index .. index + chunk_lens - 1``
+    before the fused prefix+triangle attention
+    (``ops.paged_prefill_chunk_attention``).  Pad rows are steered onto the
+    table's sentinel column (a write sink nobody attends to) instead of
+    being dropped — the block-table analog of the dense path's out-of-bounds
+    drop.  Earlier chunks' pages — including radix-shared prefix pages —
+    are read, never written, so prefix sharing composes with chunking."""
+    b, c, _ = x.shape
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    positions = idx[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    k_pool, v_pool = kv_pool
+    page = k_pool.shape[1]
+    w = block_tables.shape[1]
+    valid = jnp.arange(c)[None, :] < chunk_lens[:, None]  # [B, C]
+    # invalid rows clamp onto the last table column == the sentinel page
+    pos_w = jnp.where(valid, positions, w * page)
+    k_pool = paged_kv_write(k_pool, k_new, block_tables, pos_w)
+    v_pool = paged_kv_write(v_pool, v_new, block_tables, pos_w)
+    from repro.kernels import ops  # local import to avoid cycles
+
+    out = shard(
+        ops.paged_prefill_chunk_attention(
+            q, k_pool, v_pool, block_tables, idx, chunk_lens, impl=impl
         ),
         "bthd",
     )

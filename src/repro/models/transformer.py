@@ -875,6 +875,94 @@ def prefill_into_slot_paged(
     return tok, dict(cache, index=index, layers=new_layers)
 
 
+def prefill_chunks_into_slots(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    chunk_lens: jax.Array,
+    cache: Params,
+    *,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+    need_logits: bool = True,
+) -> tuple[jax.Array, Params]:
+    """One unified chunked-prefill microstep over ALL slots (DESIGN.md §7).
+
+    tokens: [B, C] int32 — one fixed-width prompt chunk per slot,
+    zero-padded past ``chunk_lens``; chunk_lens: [B] int32 real tokens per
+    slot (ragged: 0 freezes a slot — no K/V write, no index advance);
+    cache: the batch decode cache (dense rows or paged pool) with
+    ``index`` [B] holding each slot's prefill progress.  Because every
+    quantity is traced, ONE compiled program serves every mix of slots,
+    chunk lengths, and prefill offsets — this is the program that replaces
+    the power-of-two prefill bucket zoo.
+
+    Each layer writes the chunk's real K/V at ``index .. index +
+    chunk_lens - 1`` and attends it to the previously-written prefix
+    (radix-shared pages included, so prefix hits compose with chunking for
+    free) plus the chunk's own causal triangle; ``index`` advances by
+    ``chunk_lens`` per slot.
+
+    Returns ``(next_tokens [B] int32, cache)``: ``next_tokens[b]`` is the
+    argmax over the logits at chunk position ``chunk_lens[b] - 1`` — the
+    model's next-token prediction after the chunk, meaningful only for the
+    chunk that completes a slot's prompt (the engine fetches it exactly
+    then).  ``need_logits=False`` (draft-model prefill, whose first-token
+    logits are never read) skips the vocab projection entirely.
+
+    Attention families only: recurrent (ssm/hybrid) prefill keeps the
+    monolithic dt-masked bucket path — their state recurrence cannot skip
+    ahead chunk-by-chunk without carrying per-chunk state host-side."""
+    assert cfg.family in ("dense", "moe", "audio", "vlm"), (
+        f"chunked prefill needs an attention family, not {cfg.family!r}"
+    )
+    b, c = tokens.shape
+    x = embed_tokens(cfg, params, tokens, compute_dtype)  # [B, C, d]
+    idx = cache["index"]
+    lens = jnp.asarray(chunk_lens, jnp.int32)
+    bt = cache.get("block_tables")  # paged cache: [B, W] page map
+    cast = lambda tr: jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if a.dtype == jnp.float32 and a.ndim > 1 else a, tr)
+
+    def body(xc, per_layer):
+        lp, k_c, v_c = per_layer
+        h = L.norm(cfg, xc, lp.get("ln1"))
+        if bt is not None:
+            y, (k_c, v_c) = L.attention_prefill_chunk_paged(
+                cfg, lp["attn"], h, (k_c, v_c), bt, idx, lens,
+                impl=attn_impl,
+            )
+        else:
+            y, (k_c, v_c) = L.attention_prefill_chunk(
+                cfg, lp["attn"], h, (k_c, v_c), idx, lens, impl=attn_impl
+            )
+        xc = xc + y
+        h = L.norm(cfg, xc, lp.get("ln2"))
+        if cfg.family == "moe":
+            y2, _, _ = MOE.moe_block(cfg, lp["ffn"], h)
+        else:
+            y2 = L.mlp_block(lp["ffn"], h)
+        return xc + y2, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x,
+        (cast(params["layers"]), cache["layers"]["k"], cache["layers"]["v"]),
+    )
+    index = idx + lens
+    new_cache = dict(cache, index=index, layers={"k": k_new, "v": v_new})
+    if not need_logits:
+        return jnp.zeros((b,), jnp.int32), new_cache
+    x = L.norm(cfg, x, params.get("final_norm"))
+    # per-slot last real chunk position (frozen slots clamp to row 0 and
+    # produce garbage nobody fetches)
+    pos = jnp.maximum(lens - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(x, pos, axis=1)  # [B, 1, d]
+    logits = shard(unembed(cfg, params, last), "btv")[:, 0]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, new_cache
+
+
 def prefill_suffix_into_slot(
     cfg: ModelConfig,
     params: Params,

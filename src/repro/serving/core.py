@@ -11,11 +11,15 @@ up training bubbles) needs exactly this shape: an ONLINE arrival may
 
 Lifecycle::
 
-    WAITING --admit--> RUNNING --budget/horizon--> FINISHED_LENGTH
-       ^                  |    \--stop token-----> FINISHED_STOPPED
-       |                  |     \--abort()-------> FINISHED_ABORTED
-       +----<--preempt----+            (WAITING/PREEMPTED abort too)
-            (PREEMPTED)
+    WAITING --admit--> [PREFILLING] --> RUNNING --budget--> FINISHED_LENGTH
+       ^                    |              |  \--stop-----> FINISHED_STOPPED
+       |                    |              |   \--abort()-> FINISHED_ABORTED
+       +------<--preempt----+--------------+   (WAITING/PREEMPTED/
+            (PREEMPTED)                         PREFILLING abort too)
+
+PREFILLING exists on chunked-prefill engines only (DESIGN.md §7):
+admission reserves the slot and the prompt streams as fixed-width chunks
+across token-budgeted steps; monolithic engines go straight to RUNNING.
 
 Preemption evicts the slot's KV pages back to the ``PagePool`` (the prompt's
 full pages stay radix-cached, so resume recomputes only the uncovered
@@ -70,6 +74,10 @@ class Priority(enum.Enum):
 
 class RequestState(enum.Enum):
     WAITING = "waiting"
+    #: admitted to a slot on a chunked-prefill engine, prompt still
+    #: streaming in fixed-width chunks across token-budgeted steps
+    #: (DESIGN.md §7); monolithic engines go straight to RUNNING
+    PREFILLING = "prefilling"
     RUNNING = "running"
     PREEMPTED = "preempted"
     FINISHED_STOPPED = "finished_stopped"
@@ -142,15 +150,20 @@ class Grant:
     execution is never token-metered, only its *admission* is gated by
     ``online_ok``).  ``now`` gates arrivals; ``None`` reads the engine
     clock.  ``max_cost_steps`` caps the quantum in microstep-equivalents
-    (the remaining bubble span).  ``advance_clock``, when set, is called
-    with the planned cost right before the fused loop runs, so
-    virtual-clock runtimes stamp retirements at quantum end."""
+    (the remaining bubble span).  ``token_budget`` caps the step's MIXED
+    batch — prefill chunk tokens plus decode / spec-verify tokens — so the
+    worst-case step latency is bounded regardless of prompt length
+    (DESIGN.md §7; monolithic engines ignore it at admission, which is
+    exactly the overrun chunked prefill fixes).  ``advance_clock``, when
+    set, is called with the step's cost right before the device work runs,
+    so virtual-clock runtimes stamp retirements at quantum end."""
 
     tokens: float = math.inf
     online_ok: bool = True
     phase: Any = None
     now: Optional[float] = None
     max_cost_steps: float = math.inf
+    token_budget: float = math.inf
     advance_clock: Optional[Callable[[float], None]] = None
 
 
@@ -163,7 +176,14 @@ class StepPlan:
     preempt_to_admit: bool = False  # may admission evict OFFLINE victims?
     k: int = 0
     gamma: Optional[int] = None  # None -> plain decode loop
-    cost_steps: float = 0.0  # quantum cost in microstep-equivalents
+    cost_steps: float = 0.0  # DECODE cost in microstep-equivalents
+    #: prefill-token budget for this quantum (chunked engines stream up to
+    #: this many metered prompt tokens; inf = drain all pending, the
+    #: permissive dedicated-serving default)
+    prefill_tokens: float = math.inf
+    #: microstep-equivalents charged per prefill token (0 = prefill is
+    #: free in the cost model, the historical behavior)
+    prefill_token_cost: float = 0.0
 
 
 @dataclasses.dataclass
@@ -189,6 +209,11 @@ class StepOutputs:
     k: int = 0
     gamma: Optional[int] = None
     cost_steps: float = 0.0
+    #: prefill tokens this step computed — chunk tokens streamed (chunked
+    #: engines) or whole-prompt compute at admission (monolithic), so
+    #: ``prefill_tokens + generated-token delta`` is the step's mixed-batch
+    #: token count either way
+    prefill_tokens: int = 0
     spec_accepted: int = 0
     spec_proposed: int = 0
 
@@ -215,8 +240,71 @@ class SchedulerPolicy:
     executes the plan against the engine.  ``plan`` must not mutate core
     state — failed admissions simply stay queued."""
 
+    #: microstep-equivalents charged per prefill token by ``plan_prefill``
+    #: (0 = prefill is free in the cost model, the historical behavior;
+    #: SpecInF runtimes set it from the profiled per-token step cost so a
+    #: bubble grant can never be overrun by a long prompt — DESIGN.md §7)
+    prefill_token_cost_steps: float = 0.0
+
     def plan(self, core: "EngineCore", grant: Grant) -> StepPlan:
         raise NotImplementedError
+
+    def _clamp_k_to_budget(
+        self, plan: StepPlan, core: "EngineCore", grant: Grant
+    ) -> float:
+        """Clamp ``plan.k`` so the quantum's worst-case decode tokens
+        (1/slot, or gamma+1/slot for spec rounds) fit the grant's
+        ``token_budget``; returns the decode-token allowance consumed.
+
+        PREFILLING slots count toward the reserve: any of them may land
+        its final chunk this step and decode the full k alongside the
+        RUNNING slots — sizing on running slots alone let exactly that
+        step overshoot the grant."""
+        eng = core.engine
+        slots = min(max(eng.num_active + len(plan.admit), 1), eng.max_slots)
+        per_k = slots * (1 if plan.gamma is None else plan.gamma + 1)
+        if math.isfinite(grant.token_budget) and plan.k > 0:
+            max_k = int(grant.token_budget // per_k)
+            buckets = getattr(self, "k_buckets", DECODE_K_BUCKETS)
+            if max_k < min(buckets):
+                plan.k, plan.cost_steps = 0, 0.0
+            elif plan.k > max_k:
+                per_cost = plan.cost_steps / plan.k
+                plan.k = largest_bucket(max_k, buckets)
+                plan.cost_steps = plan.k * per_cost
+        return plan.k * per_k
+
+    def plan_prefill(
+        self,
+        core: "EngineCore",
+        grant: Grant,
+        plan: StepPlan,
+        decode_tokens: float = 0.0,
+    ) -> None:
+        """Budget this quantum's prefill stream (chunked engines): at most
+        the grant's ``token_budget`` minus the decode tokens already
+        planned, and at most what the remaining step room can pay for at
+        ``prefill_token_cost_steps`` per token — the conversion that turns
+        a bubble window into an un-overrunnable token budget."""
+        eng = core.engine
+        # monolithic engines run no chunk waves, but their admission-time
+        # prefill compute is still priced at the same per-token cost — the
+        # step cost model must not depend on the prefill layout
+        plan.prefill_token_cost = self.prefill_token_cost_steps
+        if not getattr(eng, "prefill_chunk", 0):
+            plan.prefill_tokens = 0.0
+            return
+        # a slot whose prompt completes mid-step emits its first generated
+        # token on top of the chunk stream; reserve that slack so the
+        # step's TOTAL mixed batch stays within the grant
+        slack = eng.num_prefilling + len(plan.admit)
+        budget = grant.token_budget - decode_tokens - slack
+        ptc = self.prefill_token_cost_steps
+        plan.prefill_token_cost = ptc
+        if ptc > 0 and math.isfinite(grant.max_cost_steps):
+            room = grant.max_cost_steps - plan.cost_steps
+            budget = min(budget, room / ptc)
+        plan.prefill_tokens = max(budget, 0.0)
 
     def pick_victim(
         self, core: "EngineCore", for_request: EngineRequest
@@ -256,10 +344,12 @@ class PriorityPolicy(SchedulerPolicy):
         preemption: bool = True,
         k_buckets: tuple = DECODE_K_BUCKETS,
         gamma_ctrl=None,
+        prefill_token_cost_steps: float = 0.0,
     ):
         self.preemption = preemption
         self.k_buckets = tuple(k_buckets)
         self.gamma_ctrl = gamma_ctrl
+        self.prefill_token_cost_steps = prefill_token_cost_steps
 
     def _gamma_ctrl_for(self, engine: InferenceEngine):
         if self.gamma_ctrl is None and engine.spec_enabled:
@@ -289,7 +379,9 @@ class PriorityPolicy(SchedulerPolicy):
         for cr in running + admit:
             want = max(want, cr.remaining_budget)
         if want <= 0:
-            return StepPlan(admit=admit, preempt_to_admit=self.preemption)
+            plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
+            self.plan_prefill(core, grant, plan)
+            return plan
         leftover = sum(len(q) for q in core.waiting.values()) > len(admit)
         steps = 1 if leftover else min(want, grant.max_cost_steps)
         plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
@@ -303,6 +395,8 @@ class PriorityPolicy(SchedulerPolicy):
         else:
             plan.k = largest_bucket(int(steps), self.k_buckets)
             plan.cost_steps = float(plan.k)
+        decode_tokens = self._clamp_k_to_budget(plan, core, grant)
+        self.plan_prefill(core, grant, plan, decode_tokens)
         return plan
 
     def observe(self, outputs: StepOutputs) -> None:
@@ -405,14 +499,28 @@ class EngineCore:
     # ------------------------------------------------------------------
     def step(self, grant: Optional[Grant] = None) -> StepOutputs:
         """Run ONE scheduling quantum: policy plan -> preempt -> admit ->
-        fused loop -> collect deltas/finishes."""
+        prefill chunk waves -> fused loop -> collect deltas/finishes.
+
+        On a chunked-prefill engine the quantum is the unified token-budget
+        step (DESIGN.md §7): admissions only *reserve* their slot, the
+        plan's ``prefill_tokens`` budget streams prompt chunks (PREFILLING
+        slots), and the fused loop decodes the RUNNING slots — a slot whose
+        prompt completes mid-step starts decoding in the same quantum.  The
+        whole mixed batch is priced deterministically BEFORE any device
+        work runs, so virtual-clock callers stamp retirements at the true
+        quantum end and no step can exceed its granted budget."""
         g = grant if grant is not None else Grant()
         if g.now is None:
             g = dataclasses.replace(g, now=self.engine.clock())
         self._finished_buffer = []
+        eng = self.engine
         active = list(self.slot_requests.values())
         base = {cr.request_id: len(cr.output_tokens) for cr in active}
         touched = {cr.request_id: cr for cr in active}
+        # monolithic engines run prefill compute inside admission; the
+        # engine's layout-independent meter prices it identically to the
+        # chunk waves, so cost accounting never depends on the layout
+        m0 = eng.prefill_metered_tokens
         plan = self.policy.plan(self, g)
         out = StepOutputs(k=0, gamma=None, cost_steps=0.0)
         for slot in list(plan.preempt):
@@ -431,20 +539,62 @@ class EngineCore:
                 ),
             ):
                 out.admitted.append(cr.request_id)
-        k = plan.k if self.engine.num_active > 0 else 0
-        a0, p0 = self.engine.spec_accepted, self.engine.spec_drafted
+        pf_take, completing = 0, []
+        if eng.prefill_chunk and plan.prefill_tokens > 0:
+            # deterministic preview: price the chunk waves before driving
+            _, pf_take, completing = eng._plan_prefill_waves(
+                plan.prefill_tokens
+            )
+        # decode only runs when some slot will be RUNNING after the waves
+        still_prefilling = {
+            i for i in range(eng.max_slots) if eng.slot_prefilling(i)
+        } - set(completing)
+        runnable = sum(
+            1 for i, r in enumerate(eng.slots)
+            if r is not None and i not in still_prefilling
+        )
+        k = plan.k if runnable > 0 else 0
+        if k == 0 and plan.k > 0 and eng.prefill_chunk:
+            # the planned decode can't run (every slot still mid-prefill):
+            # release its token reserve back to the chunk stream instead of
+            # throttling prefill below the grant for nothing.  plan.admit
+            # is cleared first — those requests are already admitted (and
+            # counted in num_prefilling), so re-planning must not count
+            # their completion slack twice
+            plan.k, plan.cost_steps = 0, 0.0
+            plan.admit = []
+            self.policy.plan_prefill(self, g, plan, 0.0)
+            if plan.prefill_tokens > 0:
+                _, pf_take, completing = eng._plan_prefill_waves(
+                    plan.prefill_tokens
+                )
+        a0, p0 = eng.spec_accepted, eng.spec_drafted
+        # prefill runs BEFORE the clock advances: a completing prompt's
+        # first token stamps at quantum start, the same convention as a
+        # monolithic admission's (retirements still stamp at quantum end)
+        if pf_take > 0:
+            eng._drive_prefill_chunks(plan.prefill_tokens)
+        out.prefill_tokens = eng.prefill_metered_tokens - m0
+        cost = (plan.cost_steps if k > 0 else 0.0) + (
+            (out.prefill_tokens * plan.prefill_token_cost)
+        )
+        if (k > 0 or out.prefill_tokens > 0) and g.advance_clock is not None:
+            g.advance_clock(cost)
         if k > 0:
-            out.k, out.cost_steps = k, plan.cost_steps
-            if g.advance_clock is not None:
-                g.advance_clock(plan.cost_steps)
-            if plan.gamma is not None and self.engine.spec_enabled:
+            out.k = k
+            if plan.gamma is not None and eng.spec_enabled:
                 out.gamma = plan.gamma
-                self.engine._drive_spec_loop(k, plan.gamma)
+                eng._drive_spec_loop(k, plan.gamma)
             else:
-                self.engine._drive_decode_loop(k)
-        out.spec_accepted = self.engine.spec_accepted - a0
-        out.spec_proposed = self.engine.spec_drafted - p0
+                eng._drive_decode_loop(k)
+        if k > 0 or out.prefill_tokens:
+            out.cost_steps = cost
+        out.spec_accepted = eng.spec_accepted - a0
+        out.spec_proposed = eng.spec_drafted - p0
         for slot, cr in list(self.slot_requests.items()):
+            if (cr.state is RequestState.PREFILLING
+                    and not eng.slot_prefilling(slot)):
+                cr.state = RequestState.RUNNING
             self._absorb_running(slot, cr)
         out.finished = list(self._finished_buffer)
         for cr in out.finished:
@@ -479,7 +629,8 @@ class EngineCore:
             if req.state.finished:
                 return
             out = self.step(grant)
-            if out.k == 0 and not out.admitted and not out.preempted:
+            if (out.k == 0 and not out.admitted and not out.preempted
+                    and not out.prefill_tokens):
                 stalls += 1
                 if stalls > 2:
                     raise RuntimeError(
@@ -496,7 +647,7 @@ class EngineCore:
         draft-cache slot state is reset (mid-decode abort never leaks)."""
         if req.state.finished:
             return
-        if req.state is RequestState.RUNNING:
+        if req.state in (RequestState.RUNNING, RequestState.PREFILLING):
             slot = self.slot_of(req)
             self._collect(req)
             del self.slot_requests[slot]
@@ -580,7 +731,13 @@ class EngineCore:
     # ------------------------------------------------------------------
     def _collect(self, cr: EngineRequest) -> list:
         """Absorb tokens the engine produced since the last collection into
-        the canonical stream; returns just the new ones."""
+        the canonical stream; returns just the new ones.  Also propagates
+        the engine-side TTFT stamp, which a chunked-prefill admission only
+        produces once the prompt's final chunk lands (monolithic admission
+        stamped it inside ``_try_admit``)."""
+        if (cr.first_token_time is None
+                and cr._internal.first_token_time is not None):
+            cr.first_token_time = cr._internal.first_token_time
         gen = cr._internal.generated
         new = [int(t) for t in gen[cr._consumed:]]
         cr._consumed = len(gen)
@@ -656,7 +813,7 @@ class EngineCore:
             arrival_time=cr.arrival_time,
             online=cr.priority is Priority.ONLINE,
         )
-        while not self.engine._admit_request(internal):
+        while not self.engine._admit_request(internal, stream_prefill=True):
             victim_slot = (
                 self.policy.pick_victim(self, cr) if allow_preempt else None
             )
@@ -675,7 +832,13 @@ class EngineCore:
             pass  # legacy/externally-managed request not in a queue
         cr._internal = internal
         cr._consumed = 0
-        cr.state = RequestState.RUNNING
+        # chunked engines leave the slot PREFILLING: the prompt streams in
+        # token-budgeted chunk waves and the state flips to RUNNING on the
+        # step that lands the final chunk
+        cr.state = (
+            RequestState.PREFILLING if self.engine.slot_prefilling(slot)
+            else RequestState.RUNNING
+        )
         if cr.first_token_time is None:
             cr.first_token_time = internal.first_token_time
         return True

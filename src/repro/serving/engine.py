@@ -29,10 +29,17 @@ Fast path (DESIGN.md §3):
   per-slot active/done masking and donated cache buffers — exactly ONE
   device->host transfer per loop, vs the per-step transfer of the legacy
   ``decode_microstep`` (kept for comparison and single-step callers).
-* Prefill pads prompts to power-of-two length buckets, so 20 distinct prompt
-  lengths compile a handful of programs instead of 20, and
-  ``prefill_into_slot`` writes K/V straight into the batch cache on device
-  (no host-side cache splice).
+* Chunked prefill (DESIGN.md §7, default for attention families): admission
+  only *reserves* a slot; the prompt streams as fixed-width chunks
+  (``prefill_chunk``) through ONE compiled batched program per model —
+  replacing both the power-of-two bucket family and the per-request draft
+  prefill dispatch — so a long prompt never monopolizes a step and the
+  EngineCore can meter prefill against a token budget.  The legacy
+  ``add_request`` contract drives the chunks to completion at admission;
+  ``prefill_chunk=0`` restores monolithic bucket prefill
+  (``prefill_into_slot`` writes K/V straight into the batch cache on
+  device, prompts padded to power-of-two buckets), which recurrent
+  families always use.
 
 Speculative fast path (DESIGN.md §4): constructing the engine with a
 ``draft_cfg``/``draft_params`` pairing (``configs.base.draft_config``)
@@ -63,6 +70,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import math
 import time
 from typing import Any, Callable, Optional
 
@@ -84,6 +92,11 @@ DECODE_K_BUCKETS = (1, 2, 4, 8)
 #: two, so power-of-two prefill buckets stay page-aligned; >= 8 sublanes so
 #: one page is a legal Pallas KV tile (DESIGN.md §5).
 DEFAULT_KV_PAGE_SIZE = 16
+
+#: Default chunked-prefill width (tokens per slot per wave, DESIGN.md §7).
+#: One compiled program at this fixed width replaces the whole power-of-two
+#: prefill bucket family for attention-family engines.
+DEFAULT_PREFILL_CHUNK = 32
 
 _ATTENTION_FAMILIES = ("dense", "moe", "audio", "vlm")
 
@@ -121,6 +134,7 @@ class InferenceEngine:
         kv_page_size: Optional[int] = None,
         kv_pool_pages: Optional[int] = None,
         enable_prefix_cache: bool = True,
+        prefill_chunk: Optional[int] = None,
     ):
         self.cfg = cfg
         self.max_slots = max_slots
@@ -129,6 +143,31 @@ class InferenceEngine:
         self.params = params
         self.clock: Callable[[], float] = clock or time.monotonic
         self.min_prefill_bucket = min_prefill_bucket
+
+        # --- chunked prefill (DESIGN.md §7): None -> auto (on for attention
+        # families, whose chunk attention is the verify shape; recurrent
+        # families keep the monolithic dt-masked bucket prefill); 0 -> off.
+        if prefill_chunk is None:
+            prefill_chunk = (
+                DEFAULT_PREFILL_CHUNK if cfg.family in _ATTENTION_FAMILIES
+                else 0
+            )
+        if prefill_chunk:
+            assert cfg.family in _ATTENTION_FAMILIES, (
+                f"chunked prefill needs an attention family, not "
+                f"{cfg.family!r}"
+            )
+        self.prefill_chunk = prefill_chunk
+        #: per-slot pending prompt-token streams while PREFILLING (target
+        #: and draft progress differ under prefix hits: the draft has no
+        #: prefix pool and always streams the whole prompt)
+        self._prefill_left: list[Optional[np.ndarray]] = [None] * max_slots
+        self._draft_prefill_left: list[Optional[np.ndarray]] = (
+            [None] * max_slots
+        )
+        #: device [B] next-token array from the wave that completed each
+        #: slot's target prefill, fetched in ONE batched d2h at completion
+        self._prefill_tok: list = [None] * max_slots
 
         # --- KV layout: paged pool (attention families) or dense rows ---
         if kv_page_size is None:
@@ -188,10 +227,22 @@ class InferenceEngine:
         # perf counters (benchmarks/engine_micro.py reads these)
         self.d2h_transfers = 0  # device->host syncs issued by engine code
         self.generated_tokens_total = 0
-        self.prefill_bucket_lengths: set[int] = set()
+        #: (model, impl) -> distinct program widths compiled, where model is
+        #: "target"/"draft" and impl is "bucket" (monolithic power-of-two),
+        #: "suffix" (prefix-hit suffix prefill), or "chunk" (the one
+        #: fixed-width chunked-prefill program).  ``prefill_compile_count``
+        #: sums the buckets; ``prefill_compile_counts`` reports them.
+        self._prefill_programs: dict[tuple[str, str], set] = {}
         # prefix-cache counters (prefill_skip_fraction reads these)
         self.prefill_prompt_tokens = 0
         self.prefill_skipped_tokens = 0
+        #: layout-independent prefill meter (DESIGN.md §7): per admission,
+        #: the max of the target's computed tokens (prompt minus prefix
+        #: skip) and the draft's (always the whole prompt — no draft prefix
+        #: pool), the same per-slot-per-wave metric the chunked driver
+        #: charges, so ``EngineCore.step`` prices monolithic and chunked
+        #: prefill identically
+        self.prefill_metered_tokens = 0
         # speculative-decoding counters (spec_acceptance_rate reads these)
         self.spec_rounds = 0
         self.spec_drafted = 0
@@ -234,6 +285,17 @@ class InferenceEngine:
                 ),
                 donate_argnames=("cache",),
             )
+        if self.prefill_chunk:
+            # the ONE chunked-prefill program: every argument is traced, so
+            # a single compile serves every mix of slots / chunk lengths /
+            # prefill offsets (dense and paged branch on the cache layout)
+            self._prefill_chunks = jax.jit(
+                functools.partial(
+                    T.prefill_chunks_into_slots, cfg,
+                    compute_dtype=compute_dtype, attn_impl=decode_impl,
+                ),
+                donate_argnames=("cache",),
+            )
 
         # --- speculative decoding (draft/target pairing) ---------------
         self.draft_cfg = draft_cfg
@@ -269,6 +331,19 @@ class InferenceEngine:
                 ),
                 donate_argnames=("cache",),
             )
+            if self.prefill_chunk:
+                # draft prefill folds into the same admission wave as the
+                # target's (one batched dispatch per model per wave, not
+                # one per admitted request); its first-token logits are
+                # never read, so the program skips the vocab projection
+                self._draft_prefill_chunks = jax.jit(
+                    functools.partial(
+                        T.prefill_chunks_into_slots, draft_cfg,
+                        compute_dtype=compute_dtype, attn_impl=decode_impl,
+                        need_logits=False,
+                    ),
+                    donate_argnames=("cache",),
+                )
 
     # ------------------------------------------------------------------
     @property
@@ -291,10 +366,42 @@ class InferenceEngine:
     def num_active(self) -> int:
         return sum(r is not None for r in self.slots)
 
+    def slot_prefilling(self, i: int) -> bool:
+        """True while slot ``i`` still has prompt chunks to stream (target
+        or draft side) — such a slot is frozen in the fused loops and never
+        retires mid-prefill."""
+        return (
+            self._prefill_left[i] is not None
+            or self._draft_prefill_left[i] is not None
+        )
+
+    @property
+    def num_prefilling(self) -> int:
+        return sum(
+            self.slot_prefilling(i) for i in range(self.max_slots)
+        )
+
+    def _record_prefill_program(
+        self, model: str, impl: str, width: int
+    ) -> None:
+        self._prefill_programs.setdefault((model, impl), set()).add(width)
+
     @property
     def prefill_compile_count(self) -> int:
-        """Distinct prefill programs compiled (one per prompt-length bucket)."""
-        return len(self.prefill_bucket_lengths)
+        """Distinct prefill programs compiled across models and impls (one
+        per (model, impl, width) triple).  Chunked prefill pins this to a
+        small constant — one fixed-width program per model — where the
+        bucket family grew with the prompt-length distribution."""
+        return sum(len(v) for v in self._prefill_programs.values())
+
+    def prefill_compile_counts(self) -> dict[str, int]:
+        """Per-model (target/draft), per-impl (bucket/suffix/chunk) prefill
+        program counts — the unconflated view of
+        ``prefill_compile_count``."""
+        return {
+            f"{model}/{impl}": len(widths)
+            for (model, impl), widths in sorted(self._prefill_programs.items())
+        }
 
     def _bucket_len(self, n: int, page_aligned: Optional[bool] = None) -> int:
         """Power-of-two compile bucket for a prompt of length ``n``.
@@ -380,10 +487,14 @@ class InferenceEngine:
         self.cache["block_tables"] = jnp.asarray(self._bt_host)
         self._bt_dirty = False
 
-    def _set_block_table_row(self, slot: int, pages: list[int]) -> None:
+    def _set_block_table_row(
+        self, slot: int, pages: list[int], sync: bool = True
+    ) -> None:
         self._bt_host[slot] = 0
         self._bt_host[slot, : len(pages)] = pages
-        self._sync_block_tables()
+        self._bt_dirty = True
+        if sync:
+            self._sync_block_tables()
 
     def _top_up_pages(self, steps: int) -> None:
         """Extend every active slot's block table to cover the next
@@ -438,6 +549,12 @@ class InferenceEngine:
         req = self.slots[i]
         assert req is not None, f"evict of empty slot {i}"
         self.slots[i] = None
+        # a mid-PREFILLING eviction drops the pending chunk streams: resume
+        # re-prefills from the radix-covered prefix (partial chunk work past
+        # it is recomputed — its pages were released with the slot)
+        self._prefill_left[i] = None
+        self._draft_prefill_left[i] = None
+        self._prefill_tok[i] = None
         self.cache["index"] = self.cache["index"].at[i].set(0)
         if self.spec_enabled:
             self.draft_cache["index"] = (
@@ -477,19 +594,27 @@ class InferenceEngine:
         return jnp.asarray(buf)
 
     def _bucket_buf(
-        self, tokens: np.ndarray, page_aligned: Optional[bool] = None
+        self,
+        tokens: np.ndarray,
+        page_aligned: Optional[bool] = None,
+        model: str = "target",
+        impl: str = "bucket",
     ) -> np.ndarray:
         sb = self._bucket_len(len(tokens), page_aligned)
-        self.prefill_bucket_lengths.add(sb)
+        self._record_prefill_program(model, impl, sb)
         buf = np.zeros((1, sb), np.int32)
         buf[0, : len(tokens)] = tokens
         return buf
 
-    def _paged_admit(self, slot: int, req: Request) -> Optional[int]:
-        """Capacity-based paged admission: match the radix prefix, make room
+    def _paged_reserve(
+        self, slot: int, req: Request
+    ) -> Optional[tuple[list[int], int]]:
+        """The bookkeeping half of paged admission, shared by monolithic
+        prefill and chunked streaming: match the radix prefix, make room
         (evicting LRU cached prefixes if needed), allocate prompt pages now
-        and reserve the decode horizon, then prefill — the whole prompt on a
-        miss, only the suffix on a hit."""
+        and reserve the decode horizon.  Returns ``(block-table row, shared
+        token count)``, or None on capacity.  Leaves the block tables dirty
+        — callers batch the h2d upload before their first dispatch."""
         n = len(req.prompt)
         prompt = np.asarray(req.prompt, np.int32)
         total_pages, prompt_pages = self._page_need(req)
@@ -507,13 +632,26 @@ class InferenceEngine:
         self._slot_pages[slot] = list(row)
         self._slot_reserved[slot] = total_pages - prompt_pages
         self._slot_horizon[slot] = min(n + req.max_new_tokens, self.max_seq)
-        self._slot_idx[slot] = n
-        self._set_block_table_row(slot, row)
+        self._slot_idx[slot] = len(shared_pages) * self.kv_page_size
+        self._set_block_table_row(slot, row, sync=False)
+        return row, len(shared_pages) * self.kv_page_size
 
-        shared = len(shared_pages) * self.kv_page_size
+    def _paged_admit(self, slot: int, req: Request) -> Optional[int]:
+        """Capacity-based paged MONOLITHIC admission: reserve pages, then
+        prefill in one dispatch — the whole prompt on a radix miss, only
+        the suffix on a hit.  (Chunked engines stream instead:
+        ``_begin_chunked_admit`` + ``_drive_prefill_chunks``.)"""
+        res = self._paged_reserve(slot, req)
+        if res is None:
+            return None
+        row, shared = res
+        self._sync_block_tables()  # the prefill dispatch reads the tables
+        n = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        self._slot_idx[slot] = n
         if shared:
             suffix = prompt[shared:]
-            buf = self._bucket_buf(suffix)
+            buf = self._bucket_buf(suffix, impl="suffix")
             tok, self.cache = self._suffix_prefill(
                 self.params, jnp.asarray(buf), jnp.int32(len(suffix)),
                 jnp.int32(shared), jnp.int32(slot), self.cache,
@@ -526,6 +664,7 @@ class InferenceEngine:
                 jnp.int32(n), jnp.int32(slot), self.cache,
             )
         self.prefill_prompt_tokens += n
+        self.prefill_metered_tokens += n if self.spec_enabled else n - shared
         if self.prefix_cache is not None:
             # cache the prompt's full pages for future admissions (the tree
             # takes its own reference; they outlive this slot)
@@ -535,7 +674,7 @@ class InferenceEngine:
             # the full prompt (cheap by construction; first-token output is
             # never fetched — no extra device->host transfer).  Its bucket
             # caps at max_seq, not the page-aligned roundup.
-            dbuf = self._bucket_buf(prompt, page_aligned=False)
+            dbuf = self._bucket_buf(prompt, page_aligned=False, model="draft")
             _, self.draft_cache = self._draft_prefill(
                 self.draft_params, self._embed_or_pass(self.draft_params, dbuf),
                 jnp.int32(n), jnp.int32(slot), self.draft_cache,
@@ -550,14 +689,214 @@ class InferenceEngine:
             jnp.int32(n), jnp.int32(slot), self.cache,
         )
         self.prefill_prompt_tokens += n
+        self.prefill_metered_tokens += n
         if self.spec_enabled:
             # draft cache tracks the same prefix; its first-token output is
             # never fetched (no extra device->host transfer)
+            dbuf = self._bucket_buf(
+                np.asarray(req.prompt, np.int32), model="draft"
+            )
             _, self.draft_cache = self._draft_prefill(
-                self.draft_params, self._embed_or_pass(self.draft_params, buf),
+                self.draft_params, self._embed_or_pass(self.draft_params, dbuf),
                 jnp.int32(n), jnp.int32(slot), self.draft_cache,
             )
         return tok
+
+    # ------------------------------------------------------------------
+    # Chunked prefill (DESIGN.md §7): admission reserves, waves stream
+    # ------------------------------------------------------------------
+    def _begin_chunked_admit(self, slot: int, req: Request) -> bool:
+        """Chunked admission: reserve the slot's capacity (paged: prompt
+        pages + decode-horizon reservation, radix prefix matched and held)
+        WITHOUT running any prefill compute — the prompt streams into the
+        slot as fixed-width chunks across subsequent
+        ``_drive_prefill_chunks`` waves.  Block-table mutations stay host-
+        side; the first wave ships them as ONE h2d upload covering every
+        admission in the step."""
+        n = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        shared = 0
+        if self.paged:
+            res = self._paged_reserve(slot, req)
+            if res is None:
+                return False
+            _, shared = res
+            if shared:
+                # the slot's device-side progress starts past the radix-
+                # covered prefix; chunk attention reads those shared pages
+                # directly, so the skip costs zero FLOPs as before
+                self.cache["index"] = self.cache["index"].at[slot].set(shared)
+        self._prefill_left[slot] = prompt[shared:]
+        if self.spec_enabled:
+            self._draft_prefill_left[slot] = prompt  # no draft prefix pool
+        self._prefill_tok[slot] = None
+        self.prefill_prompt_tokens += n
+        self.prefill_skipped_tokens += shared
+        self.slots[slot] = req
+        return True
+
+    def _plan_prefill_waves(self, budget: float):
+        """Host-side preview of ``_drive_prefill_chunks``: greedy slot-order
+        allocation of chunk takes, wave by wave, under ``budget`` metered
+        tokens.  Returns ``(waves, consumed, completing)`` where each wave
+        is a list of ``(slot, target_take, draft_take)`` — deterministic,
+        so schedulers can price a step's prefill cost BEFORE driving it."""
+        chunk = self.prefill_chunk
+        left: dict[int, list[int]] = {}
+        for i in range(self.max_slots):
+            t = self._prefill_left[i]
+            d = self._draft_prefill_left[i]
+            t_n = len(t) if t is not None else 0
+            d_n = len(d) if d is not None else 0
+            if t_n or d_n:
+                left[i] = [t_n, d_n]
+            elif self.slot_prefilling(i):
+                # fully-streamed but not yet finalized (shouldn't persist)
+                left[i] = [0, 0]
+        waves, consumed, completing = [], 0, []
+        budget_left = budget
+        while left:
+            wave = []
+            # shortest-pending-first: a just-admitted short (online) prompt
+            # completes ahead of a long stream instead of starving behind
+            # it when the budget runs dry mid-wave
+            order = sorted(left, key=lambda i: (max(left[i]), i))
+            for i in order:
+                if budget_left <= 0:
+                    break
+                t_n, d_n = left[i]
+                tt, dd = min(chunk, t_n), min(chunk, d_n)
+                cost = max(tt, dd)
+                if cost > budget_left:
+                    cap = int(budget_left)
+                    tt, dd = min(tt, cap), min(dd, cap)
+                    cost = max(tt, dd)
+                if cost <= 0:
+                    continue
+                wave.append((i, tt, dd))
+                left[i] = [t_n - tt, d_n - dd]
+                budget_left -= cost
+                consumed += cost
+                if left[i] == [0, 0]:
+                    completing.append(i)
+                    del left[i]
+            if not wave:
+                break
+            waves.append(wave)
+        return waves, consumed, completing
+
+    def _drive_prefill_chunks(self, budget: float = math.inf) -> int:
+        """Stream chunk waves into every PREFILLING slot, consuming at most
+        ``budget`` metered tokens (per slot per wave: max of the target and
+        draft takes).  Each wave is ONE batched target dispatch plus — when
+        a draft pairing is attached — ONE batched draft dispatch, replacing
+        the per-request prefill (and per-request draft prefill) dispatches
+        of the monolithic path.  Slots whose prompt completes get their
+        first generated token from the completing wave's logits, fetched in
+        ONE batched d2h transfer at the end.  Returns tokens consumed."""
+        if not self.prefill_chunk:
+            return 0
+        waves, consumed, _ = self._plan_prefill_waves(budget)
+        if not waves:
+            return 0
+        if self.paged and self._bt_dirty:
+            self._sync_block_tables()  # one h2d wave covers every admission
+        chunk = self.prefill_chunk
+        completed: list[int] = []
+        for wave in waves:
+            t_lens = np.zeros((self.max_slots,), np.int32)
+            d_lens = np.zeros((self.max_slots,), np.int32)
+            t_toks = np.zeros((self.max_slots, chunk), np.int32)
+            d_toks = np.zeros((self.max_slots, chunk), np.int32)
+            t_done: list[int] = []
+            for i, tt, dd in wave:
+                if tt:
+                    buf = self._prefill_left[i]
+                    t_toks[i, :tt] = buf[:tt]
+                    t_lens[i] = tt
+                    self._prefill_left[i] = buf[tt:]
+                    if len(self._prefill_left[i]) == 0:
+                        t_done.append(i)
+                    if self.paged:
+                        self._slot_idx[i] += tt
+                if dd:
+                    dbuf = self._draft_prefill_left[i]
+                    d_toks[i, :dd] = dbuf[:dd]
+                    d_lens[i] = dd
+                    self._draft_prefill_left[i] = dbuf[dd:]
+            if t_lens.any():
+                self._record_prefill_program("target", "chunk", chunk)
+                next_toks, self.cache = self._prefill_chunks(
+                    self.params, jnp.asarray(t_toks), jnp.asarray(t_lens),
+                    self.cache,
+                )
+                for i in t_done:
+                    # hold the completing wave's device logits-argmax; the
+                    # slot may still owe draft chunks before finalizing
+                    self._prefill_tok[i] = next_toks
+            if d_lens.any():
+                self._record_prefill_program("draft", "chunk", chunk)
+                _, self.draft_cache = self._draft_prefill_chunks(
+                    self.draft_params, jnp.asarray(d_toks),
+                    jnp.asarray(d_lens), self.draft_cache,
+                )
+            self.steps_executed += 1
+            for i, _, _ in wave:
+                t = self._prefill_left[i]
+                d = self._draft_prefill_left[i]
+                if (t is not None and len(t) == 0) and (
+                    d is None or len(d) == 0
+                ):
+                    completed.append(i)
+        if completed:
+            toks = jax.device_get([self._prefill_tok[i] for i in completed])
+            self.d2h_transfers += 1  # one batched fetch covers every finish
+            now = self.clock()
+            for i, arr in zip(completed, toks):
+                self._finish_prefill(i, int(np.asarray(arr)[i]), now)
+        self.prefill_metered_tokens += consumed
+        return consumed
+
+    def _finish_prefill(self, i: int, tok: int, now: float) -> None:
+        """Transition slot ``i`` PREFILLING -> RUNNING: deliver the first
+        generated token, stamp TTFT, and (paged) insert the prompt's full
+        pages into the radix tree — the same shape monolithic admission
+        produced in one shot."""
+        req = self.slots[i]
+        self._prefill_left[i] = None
+        self._draft_prefill_left[i] = None
+        self._prefill_tok[i] = None
+        req.generated.append(tok)
+        self.generated_tokens_total += 1
+        if req.first_token_time is None:
+            req.first_token_time = now
+        self.tokens = self.tokens.at[i].set(tok)
+        if self.paged and self.prefix_cache is not None:
+            prompt = np.asarray(req.prompt, np.int32)
+            self.prefix_cache.insert(
+                prompt,
+                self._slot_pages[i][: len(prompt) // self.kv_page_size],
+            )
+
+    def _restore_draft_prefill_indices(self) -> None:
+        """Re-pin the draft cache index of PREFILLING slots to their draft
+        progress: the fused speculative loop keeps draft and target indices
+        EQUAL for every slot (frozen ones included), which is wrong exactly
+        while a slot's two prefill streams sit at different offsets.  One
+        batched scatter, regardless of how many slots are mid-prefill."""
+        slots, values = [], []
+        for i in range(self.max_slots):
+            if not self.slot_prefilling(i):
+                continue
+            d = self._draft_prefill_left[i]
+            slots.append(i)
+            values.append(
+                len(self.slots[i].prompt) - (len(d) if d is not None else 0)
+            )
+        if slots:
+            self.draft_cache["index"] = self.draft_cache["index"].at[
+                np.asarray(slots)
+            ].set(np.asarray(values, np.int32))
 
     # ------------------------------------------------------------------
     # Lifecycle core + deprecated shim surface
@@ -595,8 +934,24 @@ class InferenceEngine:
         return self.core.run_legacy(k, gamma=gamma)
 
     # ------------------------------------------------------------------
-    def _admit_request(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot.  One engine microstep.
+    def _admit_request(self, req: Request, *, stream_prefill: bool = False) -> bool:
+        """Admit ``req`` into a free slot.
+
+        Monolithic engines (``prefill_chunk == 0``) prefill the whole
+        prompt in one microstep, as ever.  Chunked engines only *reserve*
+        the slot (pages, block-table row, pending chunk streams):
+
+          * ``stream_prefill=True`` (the EngineCore path) leaves the slot
+            PREFILLING — ``_drive_prefill_chunks`` streams the prompt
+            across subsequent token-budgeted steps.
+          * ``stream_prefill=False`` (the legacy shim contract) drives the
+            chunks to completion before returning, preserving the
+            historical "first token at admission" behavior bit-for-bit.
+            NOTE: the completion drive is unmetered and batches over ALL
+            PREFILLING slots — mixing the deprecated shim with core-driven
+            budgeted streaming force-completes the core's pending streams
+            outside any step's accounting; drive everything through
+            ``EngineCore.step`` when budgets matter.
 
         Returns False when no slot is free — or, on paged engines, when the
         pool cannot cover the request's worst-case page need even after
@@ -618,6 +973,12 @@ class InferenceEngine:
             # is a real arrival instant, and restamping it at admission
             # would erase the request's queueing delay.
             req.arrival_time = self.clock()
+        if self.prefill_chunk:
+            if not self._begin_chunked_admit(slot, req):
+                return False
+            if not stream_prefill:
+                self._drive_prefill_chunks()
+            return True
         if self.paged:
             tok = self._paged_admit(slot, req)
             if tok is None:
@@ -641,16 +1002,20 @@ class InferenceEngine:
 
         Finished slots freeze mid-loop on device (token, index, and budget
         held in place), so the host never needs to intervene between
-        microsteps.  Callers should pick ``k`` from ``DECODE_K_BUCKETS`` to
-        bound the number of compiled programs."""
+        microsteps — PREFILLING slots of a chunked engine freeze the same
+        way (zero budget) and never retire mid-prefill.  Callers should
+        pick ``k`` from ``DECODE_K_BUCKETS`` to bound the number of
+        compiled programs."""
         if self.num_active == 0 or k <= 0:
             return []
+        if self.num_active == self.num_prefilling:
+            return []  # every slot is mid-prefill: nothing to decode
         if self.paged:
             # extend block tables to cover the loop's k writes per slot
             self._top_up_pages(k)
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
-            if r is not None:
+            if r is not None and not self.slot_prefilling(i):
                 remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
         tokens, cache, rem, toks_seq, steps = self._decode_loop(
             self.params, self.tokens, self.cache, jnp.asarray(remaining), k=k
@@ -664,7 +1029,7 @@ class InferenceEngine:
         now = self.clock()
         finished = []
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or self.slot_prefilling(i):
                 continue
             n = int(steps_np[i])
             req.generated.extend(int(t) for t in toks_np[:n, i])
@@ -692,13 +1057,15 @@ class InferenceEngine:
         assert self.spec_enabled, "engine built without a draft pairing"
         if self.num_active == 0 or k <= 0:
             return []
+        if self.num_active == self.num_prefilling:
+            return []  # every slot is mid-prefill: nothing to verify
         if self.paged:
             # worst case every round accepts the whole chunk: cover
             # k * (gamma + 1) writes per slot
             self._top_up_pages(k * (gamma + 1))
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
-            if r is not None:
+            if r is not None and not self.slot_prefilling(i):
                 remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
         (
             self.tokens, self.cache, self.draft_cache, rem, self._spec_key,
@@ -717,7 +1084,7 @@ class InferenceEngine:
         now = self.clock()
         finished = []
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or self.slot_prefilling(i):
                 continue
             for j in range(k):
                 n = int(n_np[j, i])
@@ -733,6 +1100,11 @@ class InferenceEngine:
                 # rollback freed tokens past the accepted prefix: release
                 # the pages the worst-case top-up provisioned beyond them
                 self._trim_slot_pages(i)
+        if self.num_prefilling:
+            # the fused loop pinned every frozen slot's draft index to its
+            # TARGET index; mid-prefill the two streams sit at different
+            # offsets, so restore the draft's own progress
+            self._restore_draft_prefill_indices()
         if self.paged and self._bt_dirty:
             self._sync_block_tables()  # one upload covers trims + retires
         return finished
@@ -746,7 +1118,7 @@ class InferenceEngine:
         transfer (the old code paid 1 + num_active transfers per step).
         Kept for single-step callers and as the benchmark baseline — the
         fast path is ``decode_loop``."""
-        if self.num_active == 0:
+        if self.num_active == 0 or self.num_active == self.num_prefilling:
             return []
         if self.paged:
             self._top_up_pages(1)
@@ -754,6 +1126,22 @@ class InferenceEngine:
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.tokens = next_tokens
         self.steps_executed += 1
+        if self.num_prefilling:
+            # the single-step program advances EVERY slot's index; restore
+            # PREFILLING slots' prefill progress in one batched scatter
+            # (their garbage K/V write at the old index is overwritten by
+            # the next chunk, the usual stale-overwrite invariant)
+            slots_, values = [], []
+            for i in range(self.max_slots):
+                if self.slot_prefilling(i):
+                    left = self._prefill_left[i]
+                    slots_.append(i)
+                    values.append(len(self.slots[i].prompt) - (
+                        len(left) if left is not None else 0
+                    ))
+            self.cache["index"] = self.cache["index"].at[
+                np.asarray(slots_)
+            ].set(np.asarray(values, np.int32))
         finished = []
         host_tokens, idx_np = jax.device_get(
             (next_tokens, self.cache["index"])
@@ -761,7 +1149,7 @@ class InferenceEngine:
         self.d2h_transfers += 1  # tokens + finish-check indices, batched
         now = self.clock()
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or self.slot_prefilling(i):
                 continue
             req.generated.append(int(host_tokens[i]))
             self.generated_tokens_total += 1
