@@ -331,10 +331,13 @@ def bench_engine_core(num_online=10, offline_budget=48):
             if out.cost_steps == 0 and not out.admitted:
                 vnow[0] += step_s  # idle until the next arrival
         assert all(r.state.finished for r in offline + online)
-        lat = [r.finish_time - r.arrival_time for r in online]
-        ttft = [r.first_token_time - r.arrival_time for r in online]
+        # percentiles come from the registry's core-recorded histograms
+        # (DESIGN.md §8) — the bench no longer re-derives them from the
+        # request objects, so there is exactly one stamping path to trust
+        m = engine.obs.metrics
         return (
-            float(np.percentile(lat, 95)), float(np.percentile(ttft, 95)),
+            m.histogram("core/online_latency_s").percentile(95),
+            m.histogram("core/online_ttft_s").percentile(95),
             core.preemption_count,
         )
 
@@ -425,10 +428,11 @@ def bench_chunked_prefill(num_online=12, budget=32, plen=160):
             if out.cost_steps == 0 and not out.admitted:
                 vnow[0] += step_s  # idle until the next arrival
         assert all(r.state.finished for r in online)
-        lat = [r.finish_time - r.arrival_time for r in online]
-        ttft = [r.first_token_time - r.arrival_time for r in online]
+        # registry-recorded distributions, same cells FillingMetrics reads
+        m = engine.obs.metrics
         return (
-            float(np.percentile(ttft, 95)), float(np.percentile(lat, 95)),
+            m.histogram("core/online_ttft_s").percentile(95),
+            m.histogram("core/online_latency_s").percentile(95),
             max_step_tokens, worst_cost_ms, worst_wall_ms, engine,
         )
 
@@ -447,6 +451,93 @@ def bench_chunked_prefill(num_online=12, budget=32, plen=160):
         if policy == "chunked":
             rows.append(("micro", "prefill:chunked_compiled_programs",
                          "chunked", "count", engine.prefill_compile_count))
+    return rows
+
+
+def bench_observability(num_iterations=6):
+    """Tracing overhead + trace artifacts (DESIGN.md §8): the SAME
+    collocated SpecInF workload runs twice — step tracer enabled vs
+    disabled — on the virtual clock.  Tracing must never perturb
+    scheduling or the virtual timebase, so the deterministic rows
+    (virtual completion time, served counts, TTFT p95) are REQUIRED to be
+    identical across the pair; ``scripts/check_bench_regression.py``
+    enforces that (trivially within the <=5% budget) plus the SLO
+    attribution identity (segments sum to end-to-end latency).  The wall
+    rows are informational (host-load noise).
+
+    The traced run's artifacts are written as ``TRACE_engine.jsonl`` and
+    ``TRACE_engine.chrome.json`` — CI schema-validates the JSONL
+    (``scripts/check_trace_schema.py``) and uploads both."""
+    import itertools
+
+    from repro.core import SpecInFRuntime
+    from repro.core.profiles import dp_profile
+    from repro.obs import Observability
+    from repro.serving.core import Priority, SamplingParams
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+
+    def run(tracing):
+        engine = InferenceEngine(
+            cfg, params, max_slots=2, max_seq=96,
+            obs=Observability(tracing=tracing),
+        )
+        core = engine.core
+        for _ in range(2):
+            core.submit(
+                np.arange(8), SamplingParams(max_new_tokens=48),
+                priority=Priority.OFFLINE, arrival_time=0.0,
+            )
+        online = [
+            Request(prompt=np.arange(4), max_new_tokens=3,
+                    arrival_time=0.03 * i, online=True)
+            for i in range(8)
+        ]
+        rt = SpecInFRuntime(
+            train_step=lambda state, batch: (state, {"loss": 0.0}),
+            train_state={}, batch_iter=itertools.repeat({}),
+            profile=dp_profile("tiny", compute_s=0.03, comm_s=0.04),
+            engine=engine, online_requests=online, cfg=SpecInFConfig(),
+            decode_microstep_s=0.002,
+        )
+        t0 = time.perf_counter()
+        metrics = rt.run(num_iterations=num_iterations)
+        return engine, metrics, time.perf_counter() - t0
+
+    traced = {}
+    for mode, tracing in (("traced", True), ("untraced", False)):
+        engine, metrics, wall = run(tracing)
+        if tracing:
+            traced = {"engine": engine, "metrics": metrics}
+        rows.append(("micro", "obs:virtual_time_s(collocated)", mode, "s",
+                     round(metrics.virtual_time_s, 6)))
+        rows.append(("micro", "obs:online_served(collocated)", mode,
+                     "count", metrics.online_served))
+        rows.append(("micro", "obs:online_ttft_p95_ms(collocated)", mode,
+                     "ms", round(metrics.p95_ttft_s() * 1e3, 3)))
+        rows.append(("micro", "obs:run_wall_ms(collocated)", mode, "ms",
+                     round(wall * 1e3, 1)))
+    tr = traced["engine"].obs.tracer
+    att = tr.attribution()
+    resid = [
+        abs(ra.total - (ra.finish_time - ra.arrival_time))
+        for ra in att.values() if ra.finish_time is not None
+    ]
+    rows.append(("micro", "obs:trace_events", "traced", "count",
+                 len(tr.events)))
+    rows.append(("micro", "obs:trace_dropped", "traced", "count",
+                 tr.dropped))
+    rows.append(("micro", "obs:attribution_requests", "traced", "count",
+                 len(resid)))
+    rows.append(("micro", "obs:attribution_max_residual_s", "traced", "s",
+                 float(max(resid)) if resid else 0.0))
+    tr.write_jsonl(
+        "TRACE_engine.jsonl",
+        metrics=traced["engine"].obs.metrics.snapshot(),
+    )
+    tr.write_chrome("TRACE_engine.chrome.json")
     return rows
 
 
@@ -480,5 +571,6 @@ def all_rows():
         + bench_paged_kv()
         + bench_engine_core()
         + bench_chunked_prefill()
+        + bench_observability()
         + bench_control_plane()
     )

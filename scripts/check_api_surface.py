@@ -11,6 +11,10 @@ versions' annotation formatting):
    shim's parameters, so delegation cannot silently lose an argument.
 3. The EngineCore public surface (``submit`` / ``step`` / ``stream`` /
    ``abort`` / ``preempt``) keeps its pinned parameter lists.
+4. The legacy engine counters stay thin ``RegistryCounterView`` descriptors
+   over their pinned stable registry names (DESIGN.md §8) — renaming a
+   stable name or demoting a view back to a plain attribute breaks every
+   dashboard/bench that reads the registry.
 
     PYTHONPATH=src python scripts/check_api_surface.py
 """
@@ -22,8 +26,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.obs.metrics import STABLE_NAMES  # noqa: E402
 from repro.serving.core import EngineCore  # noqa: E402
-from repro.serving.engine import InferenceEngine  # noqa: E402
+from repro.serving.engine import (  # noqa: E402
+    InferenceEngine,
+    RegistryCounterView,
+)
 
 #: shim method -> (pinned params, core delegate it must route through)
 SHIMS = {
@@ -41,6 +49,19 @@ CORE_SURFACE = {
     "preempt": ["target"],
     "add_legacy": ["req"],
     "run_legacy": ["k", "gamma"],
+}
+
+#: legacy engine counter attribute -> pinned stable registry name
+ENGINE_COUNTER_VIEWS = {
+    "d2h_transfers": "engine/d2h_transfers",
+    "steps_executed": "engine/steps_executed",
+    "generated_tokens_total": "engine/generated_tokens",
+    "prefill_prompt_tokens": "engine/prefill_prompt_tokens",
+    "prefill_skipped_tokens": "engine/prefill_skipped_tokens",
+    "prefill_metered_tokens": "engine/prefill_metered_tokens",
+    "spec_rounds": "engine/spec_rounds",
+    "spec_drafted": "engine/spec_drafted",
+    "spec_accepted": "engine/spec_accepted",
 }
 
 
@@ -87,13 +108,30 @@ def main() -> int:
                 f"EngineCore.{name} signature drifted: {got} != pinned "
                 f"{pinned}"
             )
+    for attr, stable in ENGINE_COUNTER_VIEWS.items():
+        view = inspect.getattr_static(InferenceEngine, attr, None)
+        if not isinstance(view, RegistryCounterView):
+            failures.append(
+                f"InferenceEngine.{attr} is no longer a RegistryCounterView"
+            )
+            continue
+        if view.name != stable:
+            failures.append(
+                f"InferenceEngine.{attr} reads registry name {view.name!r}, "
+                f"pinned {stable!r}"
+            )
+        if STABLE_NAMES.get(stable) != "counter":
+            failures.append(
+                f"{stable!r} is not registered as a counter in STABLE_NAMES"
+            )
     if failures:
         print("API surface drift between the deprecated shim and EngineCore:")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print(f"OK: {len(SHIMS)} shim methods and {len(CORE_SURFACE)} core "
-          "methods match the pinned surface")
+    print(f"OK: {len(SHIMS)} shim methods, {len(CORE_SURFACE)} core "
+          f"methods, and {len(ENGINE_COUNTER_VIEWS)} counter views match "
+          "the pinned surface")
     return 0
 
 

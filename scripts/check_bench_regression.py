@@ -99,6 +99,49 @@ def main() -> int:
               f"(> {MAX_CHUNKED_PREFILL_PROGRAMS}) — the one-program "
               "contract regressed")
         return 1
+
+    # --- observability gates (DESIGN.md §8; deterministic rows) --------
+    # bench_observability runs the same collocated workload with tracing
+    # on vs off on the virtual clock.  Tracing must not perturb the
+    # schedule, so the deterministic rows must match exactly (trivially
+    # inside the <=5% step-time budget), and the trace's SLO attribution
+    # must telescope to the measured end-to-end latencies.
+    t_vt = by_policy.get(("obs:virtual_time_s(collocated)", "traced"))
+    u_vt = by_policy.get(("obs:virtual_time_s(collocated)", "untraced"))
+    t_served = by_policy.get(("obs:online_served(collocated)", "traced"))
+    u_served = by_policy.get(("obs:online_served(collocated)", "untraced"))
+    t_ttft = by_policy.get(("obs:online_ttft_p95_ms(collocated)", "traced"))
+    u_ttft = by_policy.get(
+        ("obs:online_ttft_p95_ms(collocated)", "untraced")
+    )
+    resid = by_policy.get(("obs:attribution_max_residual_s", "traced"))
+    dropped = by_policy.get(("obs:trace_dropped", "traced"))
+    if None in (t_vt, u_vt, t_served, u_served, t_ttft, u_ttft, resid,
+                dropped):
+        print(f"check_bench_regression: observability rows missing from "
+              f"{path}")
+        return 1
+    print(f"tracing: virtual time traced {t_vt}s vs untraced {u_vt}s; "
+          f"served {t_served}/{u_served}; ttft p95 {t_ttft}/{u_ttft} ms; "
+          f"attribution residual {resid}s; {dropped} dropped events")
+    if t_served < 1:
+        print("FAIL: the collocated observability workload served no "
+              "online requests")
+        return 1
+    if not t_vt <= u_vt * 1.05:
+        print("FAIL: tracing cost >5% extra virtual-clock step time")
+        return 1
+    if t_served != u_served or t_ttft != u_ttft:
+        print("FAIL: tracing perturbed the deterministic schedule "
+              "(served/TTFT rows differ between traced and untraced)")
+        return 1
+    if resid > 1e-6:
+        print("FAIL: SLO attribution segments do not sum to end-to-end "
+              "latency")
+        return 1
+    if dropped != 0:
+        print("FAIL: the tracer dropped events at bench scale")
+        return 1
     print("OK")
     return 0
 

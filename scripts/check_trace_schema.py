@@ -1,0 +1,61 @@
+"""CI gate: schema-validate the structured step-trace artifact.
+
+``benchmarks/engine_micro.py`` (``bench_observability``) writes
+``TRACE_engine.jsonl`` from a collocated virtual-clock run; this script
+re-validates it with the dependency-free validator in ``repro.obs.schema``
+(no third-party jsonschema package — nothing may be pip-installed in CI)
+and additionally checks the SLO attribution identity on the trace itself:
+every finished request's queueing/prefill/decode/preempted segments must
+sum to its end-to-end latency on the engine's single clock.
+
+    PYTHONPATH=src python scripts/check_trace_schema.py [TRACE_engine.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import attribute, validate_jsonl  # noqa: E402
+
+TOL = 1e-6  # float-addition tolerance for the telescoping identity
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "TRACE_engine.jsonl"
+    n, errors = validate_jsonl(path)
+    if errors:
+        print(f"{path}: {n} events, {len(errors)} schema errors:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    with open(path) as f:
+        events = [json.loads(line) for line in f.read().splitlines()[1:]]
+    att = attribute(events)
+    finished = {r: a for r, a in att.items() if a.finish_time is not None}
+    bad = []
+    for rid, ra in sorted(finished.items()):
+        lat = ra.finish_time - ra.arrival_time
+        if abs(ra.total - lat) > TOL:
+            bad.append((rid, ra.total, lat))
+    if bad:
+        print(f"{path}: attribution identity violated for {len(bad)} "
+              "requests:")
+        for rid, tot, lat in bad[:10]:
+            print(f"  - req {rid}: segments sum to {tot}, latency is {lat}")
+        return 1
+    if not finished:
+        print(f"{path}: no finished requests in the trace — the bench "
+              "workload has gone stale")
+        return 1
+    print(
+        f"OK: {path} — {n} schema-valid events; attribution identity holds "
+        f"for all {len(finished)} finished requests"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

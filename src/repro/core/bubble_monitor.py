@@ -42,6 +42,16 @@ class BubbleMonitor:
             return 0.0
         return sum(1 for c in self.window if c > 0) / len(self.window)
 
+    def state(self) -> dict:
+        """JSON-able window snapshot for the step trace (DESIGN.md §8): the
+        runtime attaches it to each quantum event so a trace shows what the
+        monitor believed when the scheduling decision was made."""
+        return {
+            "zero_count": self._zero_run,
+            "windows": len(self.window),
+            "utilization": self.utilization(),
+        }
+
     def reset(self) -> None:
         self.window.clear()
         self._zero_run = 0

@@ -31,7 +31,6 @@ shape.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Callable, Optional
 
@@ -42,6 +41,8 @@ from repro.configs.base import SpecInFConfig
 from repro.core.bubble_monitor import BubbleMonitor
 from repro.core.profiles import IterationProfile
 from repro.core.scheduler import AdaptiveKernelScheduler, Status
+from repro.obs import Observability
+from repro.obs.trace import _num as _jnum
 from repro.serving.core import (
     Grant,
     Priority,
@@ -56,33 +57,87 @@ from repro.serving.engine import InferenceEngine, Request
 from repro.spec.controller import AdaptiveGammaController
 
 
-@dataclasses.dataclass
 class FillingMetrics:
-    train_iterations: int = 0
-    train_losses: list = dataclasses.field(default_factory=list)
-    offline_microsteps: int = 0
-    offline_tokens_generated: int = 0
-    online_served: int = 0
-    online_latencies_s: list = dataclasses.field(default_factory=list)
-    #: time-to-first-token per online request (arrival -> first output
-    #: token), stamped by the core on the step that produced it — prefill
-    #: skips from prefix-cache hits show up here, where end-to-end latency
-    #: alone would hide them.
-    online_ttft_s: list = dataclasses.field(default_factory=list)
-    virtual_time_s: float = 0.0
-    phase_counts: dict = dataclasses.field(default_factory=dict)
-    spec_rounds: int = 0
-    preemptions: int = 0
+    """Run-level metrics for one SpecInF filling run.
+
+    Since the observability layer (DESIGN.md §8) the latency/TTFT
+    distributions and the lifecycle counters are DERIVED VIEWS over the
+    engine's metrics registry: the core records every sample once, as it
+    happens, on the engine's single clock, and this class projects the
+    run's slice of it.  Baselines snapshot the registry at construction, so
+    a pre-warmed engine never leaks earlier activity into a fresh run.
+
+    The old unbounded ``online_latencies_s`` / ``online_ttft_s`` list
+    fields survive as properties over the registry's streaming histograms:
+    while a histogram still holds its raw samples (up to its exact cap) the
+    lists — and therefore every percentile — reproduce the historical
+    values bit-for-bit; past the cap memory stays bounded and percentiles
+    are bin-interpolated (the lists are gone and raise instead of lying).
+
+    Quantities that are *run-local* rather than engine-level (train
+    iterations/losses, phase counts, virtual time, offline microsteps,
+    spec rounds) stay plain attributes."""
+
+    def __init__(self, obs: Optional[Observability] = None):
+        #: engine-less runs (bubble accounting only) get a private registry
+        self.obs = obs if obs is not None else Observability(tracing=False)
+        m = self.obs.metrics
+        self._ttft = m.histogram("core/online_ttft_s")
+        self._lat = m.histogram("core/online_latency_s")
+        self._ttft_base = self._ttft.count
+        self._lat_base = self._lat.count
+        self._served = m.counter("core/finished/online")
+        self._served_base = self._served.value
+        self._offline_tok = m.counter("core/generated_tokens/offline")
+        self._offline_tok_base = self._offline_tok.value
+        self._preempt = m.counter("core/preemptions")
+        self._preempt_base = self._preempt.value
+        self.train_iterations = 0
+        self.train_losses: list = []
+        self.offline_microsteps = 0
+        self.virtual_time_s = 0.0
+        self.phase_counts: dict = {}
+        self.spec_rounds = 0
+
+    # -- registry-backed views -----------------------------------------
+    @property
+    def online_served(self) -> int:
+        return self._served.value - self._served_base
+
+    @property
+    def offline_tokens_generated(self) -> int:
+        return self._offline_tok.value - self._offline_tok_base
+
+    @property
+    def preemptions(self) -> int:
+        return self._preempt.value - self._preempt_base
+
+    @property
+    def online_latencies_s(self) -> list:
+        """Online end-to-end latencies this run (exact list while the
+        histogram is under its cap; past it, query the percentiles)."""
+        return self._lat.values()[self._lat_base:]
+
+    @property
+    def online_ttft_s(self) -> list:
+        """Time-to-first-token per online request (arrival -> first output
+        token), stamped by the core on the step that produced it — prefill
+        skips from prefix-cache hits show up here, where end-to-end latency
+        alone would hide them."""
+        return self._ttft.values()[self._ttft_base:]
+
+    def _percentile(self, hist, base: int, q: float) -> float:
+        if hist.count - base <= 0:
+            return float("nan")
+        if hist.exact:
+            return float(np.percentile(hist.values()[base:], q))
+        return hist.percentile(q)
 
     def p95_latency_s(self) -> float:
-        if not self.online_latencies_s:
-            return float("nan")
-        return float(np.percentile(self.online_latencies_s, 95))
+        return self._percentile(self._lat, self._lat_base, 95)
 
     def ttft_percentile_s(self, q: float) -> float:
-        if not self.online_ttft_s:
-            return float("nan")
-        return float(np.percentile(self.online_ttft_s, q))
+        return self._percentile(self._ttft, self._ttft_base, q)
 
     def p95_ttft_s(self) -> float:
         return self.ttft_percentile_s(95)
@@ -222,7 +277,12 @@ class SpecInFRuntime:
         self.cfg = cfg
         self.monitor = BubbleMonitor(cfg)
         self.scheduler = AdaptiveKernelScheduler(cfg, num_instances=1)
-        self.metrics = FillingMetrics()
+        # metrics share the engine's registry (DESIGN.md §8): the core
+        # records TTFT/latency/preemptions as they happen and FillingMetrics
+        # is this run's view over them
+        self.metrics = FillingMetrics(
+            obs=engine.obs if engine is not None else None
+        )
         self.decode_microstep_s = decode_microstep_s
         # Speculative engines spend grants in verified tokens: the gamma
         # controller sizes each round from phase + observed acceptance,
@@ -263,11 +323,14 @@ class SpecInFRuntime:
             # restamped too: a wall-clock arrival would otherwise never
             # satisfy the policy's arrival gate if the slot is preempted
             # and must be re-admitted on the virtual clock.
+            tr = engine.obs.tracer
             for q in self.core.waiting.values():
                 for cr in q:
                     cr.arrival_time = 0.0
+                    tr.restamp_arrival(cr.request_id, 0.0)
             for cr in self.core.slot_requests.values():
                 cr.arrival_time = 0.0
+                tr.restamp_arrival(cr.request_id, 0.0)
             for r in sorted(
                 online_requests or [], key=lambda r: r.arrival_time
             ):
@@ -317,12 +380,22 @@ class SpecInFRuntime:
             self._advance_windows(bubble_s, activity=0)
             return
         now = self.metrics.virtual_time_s
+        tracer = self.engine.obs.tracer
+        tracer.span("bubble", "train", now, now + bubble_s, span_s=bubble_s)
         spent = 0.0
         step_cost = self.decode_microstep_s
         while spent < bubble_s:
             d = self._observe_windows(1)
             base = now + spent
             self._vnow = base  # admission/TTFT stamps land at quantum start
+            # the monitor/Algorithm-1 state behind this quantum's grant —
+            # the core folds it into the quantum trace event
+            tracer.window_state = {
+                **self.monitor.state(),
+                "status": d.status.value,
+                "phase": d.phase.value,
+                "tokens": _jnum(d.tokens),
+            }
             grant = Grant(
                 tokens=d.tokens,
                 online_ok=d.status is Status.IDLE,
@@ -351,29 +424,20 @@ class SpecInFRuntime:
         self._vnow = self.metrics.virtual_time_s
 
     def _record_step(self, out: StepOutputs) -> None:
-        """Fold one quantum's StepOutputs into FillingMetrics."""
-        online_active = False
-        for ro in out.outputs:
-            if ro.priority is Priority.ONLINE:
-                if ro.new_tokens or ro.state is RequestState.RUNNING:
-                    online_active = True
-                if ro.ttft_s is not None:
-                    self.metrics.online_ttft_s.append(ro.ttft_s)
-            else:
-                # offline slots also piggyback on online-dedicated quanta;
-                # their tokens always credit the offline meter
-                self.metrics.offline_tokens_generated += len(ro.new_tokens)
+        """Fold one quantum's StepOutputs into the RUN-LOCAL metrics.  The
+        engine-level quantities the old version stamped here (TTFT/latency
+        samples, preemptions, served/offline-token counts) are now recorded
+        by the core into the shared registry as they happen —
+        ``FillingMetrics`` reads them back as derived views."""
+        online_active = any(
+            ro.priority is Priority.ONLINE
+            and (ro.new_tokens or ro.state is RequestState.RUNNING)
+            for ro in out.outputs
+        )
         if out.gamma is not None:
             self.metrics.spec_rounds += out.k
         if not online_active:
             self.metrics.offline_microsteps += out.k
-        self.metrics.preemptions += len(out.preempted)
-        for cr in out.finished:
-            if cr.priority is Priority.ONLINE:
-                self.metrics.online_served += 1
-                self.metrics.online_latencies_s.append(
-                    cr.finish_time - cr.arrival_time
-                )
 
     # ------------------------------------------------------------------
     def run(self, num_iterations: int) -> FillingMetrics:
@@ -385,7 +449,12 @@ class SpecInFRuntime:
                 self.metrics.train_losses.append(float(loss))
             for kind, dur in self.profile.segments:
                 if kind == "compute":
+                    t0 = self.metrics.virtual_time_s
                     self.metrics.virtual_time_s += dur
+                    if self.engine is not None:
+                        self.engine.obs.tracer.span(
+                            "train_compute", "train", t0, t0 + dur
+                        )
                     self._advance_windows(dur, activity=1)
                 else:
                     self._fill_bubble(dur)

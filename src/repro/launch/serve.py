@@ -9,6 +9,13 @@ priority, explicit arrival times) and the loop just calls
 (the old loop busy-polled ``pending[0]`` and admitted at most one per
 pass), picks a responsive k bucket while arrivals are outstanding, and
 streams per-request deltas/TTFT/finish reasons back in ``StepOutputs``.
+
+The end-of-run summary reads the metrics registry (DESIGN.md §8): latency
+and TTFT percentiles come from the core-recorded histograms, finish
+reasons and peak queue depth / pool occupancy from the counters and
+per-quantum gauges.  ``--trace PREFIX`` additionally writes the structured
+step trace as ``PREFIX.jsonl`` plus a ``PREFIX.chrome.json`` Chrome trace
+(open in https://ui.perfetto.dev).
 """
 from __future__ import annotations
 
@@ -24,6 +31,42 @@ from repro.serving.core import Priority, SamplingParams
 from repro.serving.engine import InferenceEngine
 
 
+def summarize(engine: InferenceEngine) -> list:
+    """Render the registry's end-of-run summary lines."""
+    m = engine.obs.metrics
+    lines = []
+    reasons = {
+        r: m.counter(f"core/finish_reason/{r}").value
+        for r in ("stop", "length", "abort")
+    }
+    lines.append(
+        "[serve] finish reasons: "
+        + " ".join(f"{k}={v}" for k, v in reasons.items())
+        + f"; preemptions={m.counter('core/preemptions').value}"
+    )
+    peaks = []
+    for name in (
+        "core/queue_depth/online", "core/queue_depth/offline",
+        "engine/slots_active", "engine/pool/pages_in_use",
+    ):
+        gauge = m.gauge(name)
+        if gauge.samples:
+            peaks.append(f"{name.split('/', 1)[1]} peak={gauge.max:g}")
+    if peaks:
+        lines.append("[serve] gauges: " + "; ".join(peaks))
+    for name in ("core/online_latency_s", "core/online_ttft_s"):
+        h = m.histogram(name)
+        if h.count:
+            label = name.rsplit("/", 1)[1].replace("_s", "")
+            lines.append(
+                f"[serve] {label}: n={h.count} "
+                f"p50={h.percentile(50)*1e3:.1f}ms "
+                f"p95={h.percentile(95)*1e3:.1f}ms "
+                f"max={h.max*1e3:.1f}ms"
+            )
+    return lines
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=list(configs.ARCH_IDS), default="qwen3-1.7b")
@@ -35,6 +78,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--trace", metavar="PREFIX", default=None,
+        help="write the step trace to PREFIX.jsonl + PREFIX.chrome.json",
+    )
     args = ap.parse_args()
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -44,6 +91,7 @@ def main() -> None:
     engine = InferenceEngine(cfg, params, max_slots=args.slots,
                              max_seq=args.max_seq,
                              clock=lambda: time.monotonic() - t0)
+    engine.obs.tracer.enabled = args.trace is not None
     core = engine.core
 
     rng = np.random.default_rng(args.seed)
@@ -63,16 +111,25 @@ def main() -> None:
         out = core.step()
         if out.k == 0 and not out.admitted:
             time.sleep(0.001)  # idle until the next arrival
-    lat = [r.finish_time - r.arrival_time for r in requests]
-    ttft = [r.first_token_time - r.arrival_time for r in requests]
     total_tokens = sum(len(r.output_tokens) for r in requests)
     dt = time.monotonic() - t0
     print(
-        f"[serve] {len(requests)} requests, {total_tokens} tokens in {dt:.2f}s "
-        f"({total_tokens/dt:.1f} tok/s); latency p50={np.percentile(lat,50)*1e3:.1f}ms "
-        f"p95={np.percentile(lat,95)*1e3:.1f}ms; "
-        f"ttft p95={np.percentile(ttft,95)*1e3:.1f}ms"
+        f"[serve] {len(requests)} requests, {total_tokens} tokens in "
+        f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s)"
     )
+    for line in summarize(engine):
+        print(line)
+    if args.trace is not None:
+        tr = engine.obs.tracer
+        tr.write_jsonl(
+            args.trace + ".jsonl", metrics=engine.obs.metrics.snapshot()
+        )
+        tr.write_chrome(args.trace + ".chrome.json")
+        print(
+            f"[serve] trace: {args.trace}.jsonl "
+            f"({len(tr.events)} events, {tr.dropped} dropped); "
+            f"{args.trace}.chrome.json (load in https://ui.perfetto.dev)"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""Engine observability layer (DESIGN.md §8).
+
+Three coupled pieces, one per module:
+
+* ``metrics`` — the registry (counters / gauges / fixed-memory streaming
+  histograms) behind stable names; the engine's historical counter
+  attributes are thin views over it.
+* ``trace`` — the structured step tracer (one event per scheduling
+  quantum, request transitions, per-slot spans) with JSONL and
+  Chrome-trace/Perfetto export, plus the per-engine ``Observability``
+  bundle that ties a registry and a tracer together.
+* ``attribution`` — per-request SLO decomposition (queueing / prefill /
+  decode / preempted) computed from trace transitions on the engine's
+  single clock.
+* ``schema`` — the trace's authoritative field list and the
+  dependency-free validator CI runs over the JSONL artifact.
+"""
+from repro.obs.attribution import RequestAttribution, attribute
+from repro.obs.metrics import (
+    STABLE_NAMES,
+    Counter,
+    Gauge,
+    MetricsRegistry,
+    StreamingHistogram,
+)
+from repro.obs.schema import validate_events, validate_jsonl
+from repro.obs.trace import Observability, StepTracer, chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "Observability",
+    "RequestAttribution",
+    "STABLE_NAMES",
+    "StepTracer",
+    "StreamingHistogram",
+    "attribute",
+    "chrome_trace",
+    "validate_events",
+    "validate_jsonl",
+]

@@ -1,0 +1,225 @@
+"""Structured step tracer (DESIGN.md §8): one event per scheduling quantum,
+plus request state transitions and per-slot spans, exported as JSONL and as
+a Chrome trace (open in ``chrome://tracing`` or https://ui.perfetto.dev).
+
+Every timestamp a tracer event carries comes from the ENGINE'S clock (the
+caller stamps; the tracer never reads a clock of its own), so a collocated
+virtual-clock run produces a trace entirely on the virtual timebase — the
+same single-clock rule the engine applies to request timestamps.  Event
+kinds (``repro.obs.schema`` is the authoritative field list):
+
+* ``quantum`` — one per ``EngineCore.step()``: the grant, the policy plan
+  (k / gamma / admissions / preemptions / prefill budget), realized token
+  costs, the clock advance, and the bubble-monitor window state when a
+  SpecInF runtime drove the step.
+* ``transition`` — one per request state change (WAITING at submission,
+  admissions, preemptions, finishes), the raw material SLO attribution
+  (``repro.obs.attribution``) decomposes into queueing / prefill / decode /
+  preempted segments.
+* ``span`` — an interval on a named track: ``train`` carries training
+  compute and bubble spans; ``slot{i}`` carries that slot's prefill chunks,
+  decode runs, and spec rounds.  Intra-quantum sub-spans are positioned by
+  the plan's deterministic cost split (exact token counts ride in ``args``).
+* ``instant`` — point events (a request's first token).
+
+Memory is bounded: past ``max_events`` the tracer counts drops instead of
+growing (``dropped``); a disabled tracer records nothing and costs one
+attribute check per call site.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Optional
+
+__all__ = ["StepTracer", "Observability", "chrome_trace", "TRACE_VERSION"]
+
+TRACE_VERSION = 1
+
+
+def _num(x):
+    """JSON-safe number: infinities (unbounded grants) map to None."""
+    if x is None:
+        return None
+    x = float(x)
+    if math.isinf(x) or math.isnan(x):
+        return None
+    return x
+
+
+class StepTracer:
+    """Append-only structured event log on the engine's clock."""
+
+    def __init__(self, enabled: bool = True, max_events: int = 200_000):
+        self.enabled = enabled
+        self.max_events = max_events
+        self.events: list = []
+        self.dropped = 0
+        self._seq = 0
+        #: bubble-monitor window state for the NEXT quantum event — a
+        #: SpecInF runtime sets it right before ``EngineCore.step`` and the
+        #: core folds it into the quantum record (then clears it, so a
+        #: non-runtime step never carries a stale window).
+        self.window_state: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    def _emit(self, ev: dict) -> None:
+        if not self.enabled:
+            return
+        if len(self.events) >= self.max_events:
+            self.dropped += 1
+            return
+        ev["seq"] = self._seq
+        self._seq += 1
+        self.events.append(ev)
+
+    def quantum(self, t0: float, t1: float, **args) -> None:
+        self._emit({
+            "type": "quantum", "t0": float(t0), "t1": float(t1),
+            "args": args,
+        })
+
+    def span(self, name: str, track: str, t0: float, t1: float,
+             **args) -> None:
+        self._emit({
+            "type": "span", "name": name, "track": track,
+            "t0": float(t0), "t1": float(t1), "args": args,
+        })
+
+    def instant(self, name: str, t: float, track: str = "control",
+                **args) -> None:
+        self._emit({
+            "type": "instant", "name": name, "t": float(t), "track": track,
+            "args": args,
+        })
+
+    def transition(self, request_id: int, frm: Optional[str], to: str,
+                   t: float, priority: Optional[str] = None) -> None:
+        self._emit({
+            "type": "transition", "request_id": int(request_id),
+            "frm": frm, "to": to, "t": float(t), "priority": priority,
+        })
+
+    def restamp_arrival(self, request_id: int, t: float) -> None:
+        """Rewrite a request's WAITING (submission) transition timestamp —
+        the hook ``SpecInFRuntime`` uses when it restamps wall-clock
+        arrivals onto the virtual epoch, so the trace and the request
+        records stay on one timebase."""
+        for ev in self.events:
+            if (ev["type"] == "transition"
+                    and ev["request_id"] == request_id
+                    and ev["to"] == "waiting"):
+                ev["t"] = float(t)
+
+    # ------------------------------------------------------------------
+    # Derived views
+    # ------------------------------------------------------------------
+    def attribution(self):
+        """Per-request SLO attribution computed from this trace's
+        transition events (``repro.obs.attribution.attribute``)."""
+        from repro.obs.attribution import attribute
+
+        return attribute(self.events)
+
+    # ------------------------------------------------------------------
+    # Export
+    # ------------------------------------------------------------------
+    def meta(self, **extra) -> dict:
+        m = {
+            "type": "meta", "version": TRACE_VERSION,
+            "events": len(self.events), "dropped": self.dropped,
+        }
+        m.update(extra)
+        return m
+
+    def jsonl_lines(self, **meta):
+        yield json.dumps(self.meta(**meta))
+        for ev in self.events:
+            yield json.dumps(ev)
+
+    def write_jsonl(self, path: str, **meta) -> None:
+        with open(path, "w") as f:
+            for line in self.jsonl_lines(**meta):
+                f.write(line + "\n")
+
+    def write_chrome(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(chrome_trace(self.events), f)
+
+
+def chrome_trace(events: list) -> dict:
+    """Render structured events as a Chrome trace (catapult JSON): spans and
+    quanta become complete ('X') events, instants/transitions become
+    instant ('i') events, and each track becomes a named thread so Perfetto
+    shows training, bubbles, the control plane, and every slot as parallel
+    timelines.  Timestamps convert from engine-clock seconds to µs."""
+    tids: dict = {}
+
+    def tid(track: str) -> int:
+        if track not in tids:
+            tids[track] = len(tids) + 1
+        return tids[track]
+
+    # stable track order: control first, then train, then slots
+    tid("control")
+    tid("train")
+    out = []
+    for ev in events:
+        kind = ev["type"]
+        if kind == "quantum":
+            out.append({
+                "ph": "X", "name": "quantum", "cat": "quantum",
+                "ts": ev["t0"] * 1e6,
+                "dur": max(ev["t1"] - ev["t0"], 0.0) * 1e6,
+                "pid": 0, "tid": tid("control"), "args": ev["args"],
+            })
+        elif kind == "span":
+            out.append({
+                "ph": "X", "name": ev["name"], "cat": "span",
+                "ts": ev["t0"] * 1e6,
+                "dur": max(ev["t1"] - ev["t0"], 0.0) * 1e6,
+                "pid": 0, "tid": tid(ev["track"]), "args": ev["args"],
+            })
+        elif kind == "instant":
+            out.append({
+                "ph": "i", "s": "t", "name": ev["name"], "cat": "instant",
+                "ts": ev["t"] * 1e6, "pid": 0, "tid": tid(ev["track"]),
+                "args": ev["args"],
+            })
+        elif kind == "transition":
+            out.append({
+                "ph": "i", "s": "t",
+                "name": f"req{ev['request_id']}:{ev['to']}",
+                "cat": "transition", "ts": ev["t"] * 1e6,
+                "pid": 0, "tid": tid("control"),
+                "args": {"request_id": ev["request_id"],
+                         "from": ev["frm"], "priority": ev["priority"]},
+            })
+    meta = [{
+        "ph": "M", "name": "process_name", "pid": 0,
+        "args": {"name": "specinf-engine"},
+    }]
+    for track, t in tids.items():
+        meta.append({
+            "ph": "M", "name": "thread_name", "pid": 0, "tid": t,
+            "args": {"name": track},
+        })
+        meta.append({
+            "ph": "M", "name": "thread_sort_index", "pid": 0, "tid": t,
+            "args": {"sort_index": t},
+        })
+    return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+
+class Observability:
+    """The per-engine observability bundle: ONE metrics registry + ONE step
+    tracer.  Constructed by ``InferenceEngine`` when the caller does not
+    inject its own; the core, the SpecInF runtime, and the benches all
+    share the engine's instance, which is what makes the registry the
+    single source of truth."""
+
+    def __init__(self, tracing: bool = True, max_events: int = 200_000):
+        from repro.obs.metrics import MetricsRegistry
+
+        self.metrics = MetricsRegistry()
+        self.tracer = StepTracer(enabled=tracing, max_events=max_events)

@@ -45,6 +45,7 @@ from typing import Any, Callable, Iterator, Optional, Union
 
 import numpy as np
 
+from repro.obs.trace import _num as _jnum
 from repro.serving.engine import DECODE_K_BUCKETS, InferenceEngine, Request
 
 __all__ = [
@@ -435,6 +436,10 @@ class EngineCore:
                 "requests; drain it before attaching a new EngineCore"
             )
         engine._core = self
+        #: the engine's observability bundle (DESIGN.md §8): the core
+        #: records lifecycle transitions, per-quantum trace events, and the
+        #: latency/TTFT histograms into it
+        self.obs = engine.obs
         self.policy = policy or PriorityPolicy()
         self.waiting: dict = {
             Priority.ONLINE: collections.deque(),
@@ -442,7 +447,6 @@ class EngineCore:
         }
         self.requests: dict = {}  # request_id -> EngineRequest
         self.slot_requests: dict = {}  # slot index -> EngineRequest (RUNNING)
-        self.preemption_count = 0
         self._finished_buffer: list = []
 
     # ------------------------------------------------------------------
@@ -478,6 +482,10 @@ class EngineCore:
         )
         self.waiting[priority].append(cr)
         self.requests[cr.request_id] = cr
+        self.obs.tracer.transition(
+            cr.request_id, None, "waiting", arrival_time,
+            priority=priority.value,
+        )
         return cr
 
     def slot_of(self, req: EngineRequest) -> Optional[int]:
@@ -493,6 +501,12 @@ class EngineCore:
     @property
     def has_unfinished(self) -> bool:
         return bool(self.num_waiting or self.slot_requests)
+
+    @property
+    def preemption_count(self) -> int:
+        """Total ``preempt()`` evictions — a view of the registry's
+        ``core/preemptions`` counter (the historical attribute surface)."""
+        return self.obs.metrics.counter("core/preemptions").value
 
     # ------------------------------------------------------------------
     # One scheduling quantum
@@ -580,8 +594,16 @@ class EngineCore:
         )
         if (k > 0 or out.prefill_tokens > 0) and g.advance_clock is not None:
             g.advance_clock(cost)
+        ran_slots: dict = {}
         if k > 0:
             out.k = k
+            # the slots the fused loop will decode (for per-slot spans);
+            # captured now because retirements mutate the map mid-loop
+            ran_slots = {
+                slot: cr.request_id
+                for slot, cr in self.slot_requests.items()
+                if not eng.slot_prefilling(slot)
+            }
             if plan.gamma is not None and eng.spec_enabled:
                 out.gamma = plan.gamma
                 eng._drive_spec_loop(k, plan.gamma)
@@ -594,22 +616,46 @@ class EngineCore:
         for slot, cr in list(self.slot_requests.items()):
             if (cr.state is RequestState.PREFILLING
                     and not eng.slot_prefilling(slot)):
+                # the final chunk landed during this step's waves, before
+                # the clock advance: flip stamps at quantum start, where
+                # the first token was stamped
                 cr.state = RequestState.RUNNING
+                self.obs.tracer.transition(
+                    cr.request_id, "prefilling", "running", g.now,
+                    priority=cr.priority.value,
+                )
             self._absorb_running(slot, cr)
+        m = self.obs.metrics
         out.finished = list(self._finished_buffer)
         for cr in out.finished:
             touched.setdefault(cr.request_id, cr)
             base.setdefault(cr.request_id, 0)
+            pri = cr.priority.value
+            m.counter("core/finished/" + pri).inc()
+            m.histogram(f"core/{pri}_latency_s").record(
+                cr.finish_time - cr.arrival_time
+            )
         for rid, cr in touched.items():
             new = cr.output_tokens[base.get(rid, 0):]
             ttft = None
             if cr.first_token_time is not None and not cr._ttft_reported:
                 cr._ttft_reported = True
                 ttft = cr.first_token_time - cr.arrival_time
+                self.obs.tracer.instant(
+                    "first_token", cr.first_token_time, request_id=rid,
+                    priority=cr.priority.value,
+                )
+                if cr.priority is Priority.ONLINE:
+                    m.histogram("core/online_ttft_s").record(ttft)
+            if new:
+                m.counter(
+                    "core/generated_tokens/" + cr.priority.value
+                ).inc(len(new))
             out.outputs.append(RequestOutput(
                 request_id=rid, priority=cr.priority, new_tokens=list(new),
                 state=cr.state, finish_reason=cr.finish_reason, ttft_s=ttft,
             ))
+        self._record_quantum(g, plan, out, ran_slots)
         self.policy.observe(out)
         return out
 
@@ -671,6 +717,7 @@ class EngineCore:
         cr = self.slot_requests.pop(slot, None) if slot is not None else None
         if cr is None:
             return None
+        frm = cr.state.value
         new = self._collect(cr)
         self.engine.evict_slot(slot)
         cr._internal = None
@@ -680,7 +727,11 @@ class EngineCore:
             return cr
         cr.state = RequestState.PREEMPTED
         cr.preemptions += 1
-        self.preemption_count += 1
+        self.obs.metrics.counter("core/preemptions").inc()
+        self.obs.tracer.transition(
+            cr.request_id, frm, "preempted", self.engine.clock(),
+            priority=cr.priority.value,
+        )
         self.waiting[cr.priority].appendleft(cr)
         return cr
 
@@ -709,6 +760,15 @@ class EngineCore:
         )
         self.slot_requests[slot] = cr
         self.requests[cr.request_id] = cr
+        tr = self.obs.tracer
+        tr.transition(
+            cr.request_id, None, "waiting", cr.arrival_time,
+            priority=cr.priority.value,
+        )
+        tr.transition(
+            cr.request_id, "waiting", "running", self.engine.clock(),
+            priority=cr.priority.value,
+        )
         return True
 
     def run_legacy(self, k: int, gamma: Optional[int] = None) -> list:
@@ -729,6 +789,81 @@ class EngineCore:
     # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
+    def _record_quantum(
+        self, g: Grant, plan: StepPlan, out: StepOutputs, ran_slots: dict
+    ) -> None:
+        """Per-quantum observability (DESIGN.md §8): sample the gauges and
+        emit the structured trace events for this step — one ``quantum``
+        record plus per-slot prefill/decode/spec spans.  Span boundaries
+        are the engine clock's quantum endpoints; the prefill/decode split
+        inside the quantum follows the plan's deterministic cost model
+        (prefill runs first, before the clock advance)."""
+        eng = self.engine
+        m = self.obs.metrics
+        m.gauge("core/queue_depth/online").set(
+            len(self.waiting[Priority.ONLINE])
+        )
+        m.gauge("core/queue_depth/offline").set(
+            len(self.waiting[Priority.OFFLINE])
+        )
+        m.gauge("engine/slots_active").set(eng.num_active)
+        m.gauge("engine/slots_prefilling").set(eng.num_prefilling)
+        if eng.pool is not None:
+            for key, v in eng.pool.occupancy().items():
+                m.gauge(f"engine/pool/{key}").set(v)
+        tr = self.obs.tracer
+        window, tr.window_state = tr.window_state, None
+        if not tr.enabled:
+            return
+        t0, t1 = g.now, eng.clock()
+        pf_cost = out.prefill_tokens * plan.prefill_token_cost
+        dec_cost = plan.cost_steps if out.k > 0 else 0.0
+        total = pf_cost + dec_cost
+        t_mid = t0 + (t1 - t0) * (pf_cost / total if total > 0 else 0.0)
+        if out.prefill_tokens:
+            if eng.prefill_chunk:
+                for slot, ntok in eng.last_prefill_slot_tokens.items():
+                    cr = self.slot_requests.get(slot)
+                    tr.span(
+                        "prefill_chunk", f"slot{slot}", t0, t_mid,
+                        tokens=ntok,
+                        request_id=None if cr is None else cr.request_id,
+                    )
+            else:
+                for rid in out.admitted:
+                    cr = self.requests.get(rid)
+                    slot = None if cr is None else self.slot_of(cr)
+                    if slot is not None:
+                        tr.span(
+                            "prefill", f"slot{slot}", t0, t_mid,
+                            request_id=rid,
+                        )
+        name = "spec_round" if out.gamma is not None else "decode"
+        for slot, rid in ran_slots.items():
+            tr.span(
+                name, f"slot{slot}", t_mid, t1, k=out.k, gamma=out.gamma,
+                request_id=rid,
+            )
+        tr.quantum(
+            t0, t1,
+            grant={
+                "tokens": _jnum(g.tokens), "online_ok": g.online_ok,
+                "phase": (
+                    None if g.phase is None
+                    else str(getattr(g.phase, "value", g.phase))
+                ),
+                "max_cost_steps": _jnum(g.max_cost_steps),
+                "token_budget": _jnum(g.token_budget),
+            },
+            k=out.k, gamma=out.gamma, cost_steps=out.cost_steps,
+            prefill_tokens=out.prefill_tokens,
+            admitted=list(out.admitted), preempted=list(out.preempted),
+            finished=[cr.request_id for cr in out.finished],
+            spec_accepted=out.spec_accepted,
+            spec_proposed=out.spec_proposed,
+            window=window,
+        )
+
     def _collect(self, cr: EngineRequest) -> list:
         """Absorb tokens the engine produced since the last collection into
         the canonical stream; returns just the new ones.  Also propagates
@@ -760,10 +895,17 @@ class EngineCore:
     def _finish(
         self, cr: EngineRequest, state: RequestState, now: float
     ) -> None:
+        frm = cr.state.value
         cr.state = state
         cr.finish_reason = FINISH_REASONS[state]
         cr.finish_time = now
         self._finished_buffer.append(cr)
+        self.obs.metrics.counter(
+            "core/finish_reason/" + cr.finish_reason
+        ).inc()
+        self.obs.tracer.transition(
+            cr.request_id, frm, state.value, now, priority=cr.priority.value,
+        )
 
     def _absorb_running(self, slot: int, cr: EngineRequest) -> None:
         new = self._collect(cr)
@@ -798,6 +940,7 @@ class EngineCore:
         """Admit ``cr`` (prefill into a slot), evicting policy-chosen
         OFFLINE victims while admission fails and ``allow_preempt``.  On
         failure the request simply stays where it was in its queue."""
+        frm = cr.state.value
         if cr.remaining_budget <= 0:
             # a preempted request whose budget was exactly exhausted
             self.waiting[cr.priority].remove(cr)
@@ -841,4 +984,8 @@ class EngineCore:
         )
         if cr.first_token_time is None:
             cr.first_token_time = internal.first_token_time
+        self.obs.tracer.transition(
+            cr.request_id, frm, cr.state.value, self.engine.clock(),
+            priority=cr.priority.value,
+        )
         return True

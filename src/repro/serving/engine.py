@@ -80,6 +80,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SpecDecodeConfig
 from repro.models import transformer as T
+from repro.obs import Observability
 from repro.serving.kv_pool import PagePool, RadixCache
 
 _req_counter = itertools.count()
@@ -101,6 +102,36 @@ DEFAULT_PREFILL_CHUNK = 32
 _ATTENTION_FAMILIES = ("dense", "moe", "audio", "vlm")
 
 
+class RegistryCounterView:
+    """Thin view (DESIGN.md §8): a historical ``InferenceEngine`` counter
+    attribute backed by a ``repro.obs`` registry counter under a stable
+    name.  ``engine.d2h_transfers += 1`` and
+    ``engine.obs.metrics.counter("engine/d2h_transfers")`` are the SAME
+    cell, so the legacy attribute surface and the registry can never
+    diverge — ``scripts/check_api_surface.py`` pins the mapping.  The
+    counter object is cached on the instance after the first access, so
+    hot paths pay one ``getattr`` plus an integer add."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._cache_attr = "_ctr_" + name.replace("/", "_")
+
+    def _cell(self, obj):
+        cell = getattr(obj, self._cache_attr, None)
+        if cell is None:
+            cell = obj.obs.metrics.counter(self.name)
+            setattr(obj, self._cache_attr, cell)
+        return cell
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return self._cell(obj).value
+
+    def __set__(self, obj, value):
+        self._cell(obj).set(value)
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray  # [prompt_len] int32
@@ -115,6 +146,24 @@ class Request:
 
 
 class InferenceEngine:
+    # Historical perf-counter attributes, now thin views over the metrics
+    # registry (stable names: repro.obs.metrics.STABLE_NAMES; mapping
+    # pinned by scripts/check_api_surface.py).  Reads/writes hit the same
+    # cell as obs.metrics.counter(name).
+    d2h_transfers = RegistryCounterView("engine/d2h_transfers")
+    steps_executed = RegistryCounterView("engine/steps_executed")
+    generated_tokens_total = RegistryCounterView("engine/generated_tokens")
+    prefill_prompt_tokens = RegistryCounterView("engine/prefill_prompt_tokens")
+    prefill_skipped_tokens = RegistryCounterView(
+        "engine/prefill_skipped_tokens"
+    )
+    prefill_metered_tokens = RegistryCounterView(
+        "engine/prefill_metered_tokens"
+    )
+    spec_rounds = RegistryCounterView("engine/spec_rounds")
+    spec_drafted = RegistryCounterView("engine/spec_drafted")
+    spec_accepted = RegistryCounterView("engine/spec_accepted")
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -135,7 +184,12 @@ class InferenceEngine:
         kv_pool_pages: Optional[int] = None,
         enable_prefix_cache: bool = True,
         prefill_chunk: Optional[int] = None,
+        obs: Optional[Observability] = None,
     ):
+        # observability bundle FIRST: the counter attributes below are
+        # RegistryCounterView descriptors whose backing cells live in
+        # ``self.obs.metrics``, so it must exist before any ``= 0`` lands
+        self.obs = obs or Observability()
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -168,6 +222,9 @@ class InferenceEngine:
         #: device [B] next-token array from the wave that completed each
         #: slot's target prefill, fetched in ONE batched d2h at completion
         self._prefill_tok: list = [None] * max_slots
+        #: slot -> metered tokens taken by the LAST _drive_prefill_chunks
+        #: call (the core turns these into per-slot prefill-chunk spans)
+        self.last_prefill_slot_tokens: dict[int, int] = {}
 
         # --- KV layout: paged pool (attention families) or dense rows ---
         if kv_page_size is None:
@@ -794,11 +851,17 @@ class InferenceEngine:
         of the monolithic path.  Slots whose prompt completes get their
         first generated token from the completing wave's logits, fetched in
         ONE batched d2h transfer at the end.  Returns tokens consumed."""
+        self.last_prefill_slot_tokens = {}
         if not self.prefill_chunk:
             return 0
         waves, consumed, _ = self._plan_prefill_waves(budget)
         if not waves:
             return 0
+        for wave in waves:
+            for i, tt, dd in wave:
+                self.last_prefill_slot_tokens[i] = (
+                    self.last_prefill_slot_tokens.get(i, 0) + max(tt, dd)
+                )
         if self.paged and self._bt_dirty:
             self._sync_block_tables()  # one h2d wave covers every admission
         chunk = self.prefill_chunk

@@ -77,6 +77,15 @@ class PagePool:
     def pages_in_use(self) -> int:
         return self.num_pages - 1 - len(self._free)
 
+    def occupancy(self) -> dict:
+        """Capacity snapshot keyed by the ``engine/pool/*`` gauge suffixes
+        (DESIGN.md §8) — sampled once per scheduling quantum."""
+        return {
+            "pages_in_use": self.pages_in_use,
+            "available": self.available,
+            "reserved": self.reserved,
+        }
+
     def pages_for(self, tokens: int) -> int:
         """Physical pages needed to back ``tokens`` KV entries."""
         return -(-tokens // self.page_size)
