@@ -563,6 +563,224 @@ def bench_control_plane():
     return rows
 
 
+def bench_degradation(num_online=20, offline_backlog=10, step_s=0.002):
+    """Overload-ladder payoff under a bursty arrival spike (DESIGN.md §9):
+    the SAME workload — an OFFLINE backlog plus a burst of deadline-bearing
+    ONLINE arrivals at 10x the slot concurrency — runs twice on the virtual
+    clock, with and without the graceful-degradation ladder installed.
+    Identical arrivals, prompts, and budgets; the ONLY difference is
+    whether ``core.ladder`` may disable spec, shrink k, and shed work.
+
+    The CI gate (``scripts/check_bench_regression.py``) reads the pair:
+    the ladder must not worsen served-online p95 and must actually shed
+    (a ladder that never fires is dead code, one that fires and still
+    loses on latency is a regression).  The stage-occupancy rows record
+    which rungs the run visited — the hysteresis evidence."""
+    from repro.resilience import LadderConfig, LadderStage, OverloadLadder
+    from repro.serving.core import (
+        EngineCore, Grant, Priority, PriorityPolicy, SamplingParams,
+    )
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+
+    def run(ladder):
+        vnow = [0.0]
+        engine = InferenceEngine(
+            cfg, params, max_slots=2, max_seq=128, clock=lambda: vnow[0],
+        )
+        # no preemption: degradation is the mitigation under test, not
+        # eviction (bench_engine_core holds the preemption comparison)
+        core = EngineCore(engine, policy=PriorityPolicy(preemption=False))
+        if ladder:
+            core.ladder = OverloadLadder(LadderConfig(
+                high_queue_depth=6, low_queue_depth=2, up_dwell=2,
+                down_dwell=6, offline_keep_depth=2, online_slack_s=0.05,
+            ))
+        rng = np.random.default_rng(0)
+        for _ in range(offline_backlog):
+            core.submit(
+                rng.integers(0, cfg.vocab_size, 8),
+                SamplingParams(max_new_tokens=32),
+                priority=Priority.OFFLINE, arrival_time=0.0,
+            )
+        # the burst: 10x the slot concurrency inside ~40ms, every request
+        # carrying a queue deadline (satellite: SamplingParams.deadline_s)
+        arrivals = 0.05 + np.cumsum(rng.exponential(0.002, num_online))
+        for t in arrivals:
+            core.submit(
+                rng.integers(0, cfg.vocab_size, 8),
+                SamplingParams(max_new_tokens=4, deadline_s=0.25),
+                priority=Priority.ONLINE, arrival_time=float(t),
+            )
+
+        def grant():
+            base = vnow[0]
+            return Grant(
+                now=base, token_budget=16,
+                advance_clock=lambda steps, b=base: vnow.__setitem__(
+                    0, b + steps * step_s
+                ),
+            )
+
+        while core.has_unfinished:
+            out = core.step(grant())
+            if out.cost_steps == 0 and not out.admitted:
+                vnow[0] += step_s  # idle until the next arrival
+        return engine.obs.metrics
+
+    for policy, ladder in (("ladder", True), ("no_ladder", False)):
+        m = run(ladder)
+        lat = m.histogram("core/online_latency_s")
+        rows.append(("micro", "resil:online_p95_ms(burst)", policy, "ms",
+                     round(lat.percentile(95) * 1e3, 2)))
+        rows.append(("micro", "resil:online_served(burst)", policy,
+                     "count", lat.count))
+        rows.append(("micro", "resil:expired(burst)", policy, "count",
+                     m.counter("core/finish_reason/expired").value))
+        if ladder:
+            shed = (m.counter("fault/shed/offline").value
+                    + m.counter("fault/shed/online").value)
+            rows.append(("micro", "resil:shed_fraction(burst)", policy,
+                         "fraction",
+                         round(shed / (num_online + offline_backlog), 3)))
+            rows.append(("micro", "resil:ladder_escalations(burst)", policy,
+                         "count", m.counter("fault/ladder_escalations").value))
+            for stage in LadderStage:
+                name = stage.name.lower()
+                rows.append((
+                    "micro", f"resil:ladder_quanta({name})", policy, "count",
+                    m.counter("fault/ladder_steps/" + name).value,
+                ))
+    return rows
+
+
+def bench_revocation(step_s=0.002):
+    """Revocable-grant yield bound (DESIGN.md §9): a quantum is granted,
+    then the training side raises the revocation signal mid-quantum (the
+    early-resume case).  Measured on the virtual clock: how far past the
+    signal does the engine run before yielding the GPU?
+
+    The monolithic row is the historical contract — a grant runs its
+    full fused dispatch, so the training step eats the whole remaining
+    quantum as overrun.  The revocable row splits the quantum into
+    ``revoke_check_steps`` sub-dispatches and must yield within one
+    sub-dispatch of the signal — the documented bound the CI gate
+    enforces (``scripts/check_bench_regression.py``)."""
+    from repro.serving.core import (
+        EngineCore, Grant, Priority, PriorityPolicy, RevocationSignal,
+        SamplingParams,
+    )
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    check_steps = 1
+    rows = []
+
+    def run(revocable):
+        vnow = [0.0]
+        engine = InferenceEngine(
+            cfg, params, max_slots=4, max_seq=128, clock=lambda: vnow[0],
+        )
+        core = EngineCore(engine, policy=PriorityPolicy())
+        for _ in range(4):
+            core.submit(
+                np.arange(8), SamplingParams(max_new_tokens=64),
+                priority=Priority.OFFLINE, arrival_time=0.0,
+            )
+
+        def grant(sig=None):
+            base = vnow[0]
+            return Grant(
+                now=base, revocation=sig, revoke_check_steps=check_steps,
+                advance_clock=lambda steps, b=base: vnow.__setitem__(
+                    0, b + steps * step_s
+                ),
+            )
+
+        core.step(grant())  # admission + prefill
+        core.step(grant())  # steady-state decode (compile warm)
+        base = vnow[0]
+        revoke_at = base + 2.5 * step_s  # signal lands mid-quantum
+        sig = RevocationSignal()
+        sig.arm(revoke_at)
+        out = core.step(grant(sig if revocable else None))
+        assert out.k > 0 and out.revoked == (revocable and True)
+        return vnow[0] - revoke_at, out
+
+    for policy, revocable in (("revocable", True), ("monolithic", False)):
+        overrun_s, out = run(revocable)
+        rows.append(("micro", "resil:revocation_overrun_ms", policy, "ms",
+                     round(overrun_s * 1e3, 3)))
+        if revocable:
+            # one sub-dispatch of plain decode = check_steps microsteps
+            rows.append(("micro", "resil:revocation_overrun_bound_ms",
+                         policy, "ms", round(check_steps * step_s * 1e3, 3)))
+            rows.append(("micro", "resil:revocation_partial_k", policy,
+                         "count", out.k))
+    return rows
+
+
+def bench_early_resume(num_iterations=6):
+    """Training-side cost of revocation (DESIGN.md §9): the collocated
+    SpecInF runtime runs with and without injected early training
+    resumes (``runtime/early_resume`` — the bubble-misprediction fault).
+    Revocation is how serving pays for the overrun, so training's
+    virtual step time must stay AT the no-serving analytic baseline in
+    both runs — the CI gate (``scripts/check_bench_regression.py``)
+    enforces it exactly (virtual clock, deterministic).  The overrun row
+    is the serving-side price: how far past the resume instant the
+    revoked quantum ran."""
+    import itertools
+
+    from repro.core import SpecInFRuntime
+    from repro.core.profiles import dp_profile
+    from repro.resilience import FaultInjector, FaultSpec
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    compute_s, comm_s = 0.02, 0.04
+    # dp_profile exposes comm_s * (1 - overlap) per iteration (overlap 0.3)
+    baseline_s = num_iterations * (compute_s + comm_s * 0.7)
+
+    def run(faults):
+        engine = InferenceEngine(cfg, params, max_slots=2, max_seq=128)
+        for _ in range(2):
+            engine.add_request(
+                Request(prompt=np.arange(8), max_new_tokens=10**9)
+            )
+        rt = SpecInFRuntime(
+            train_step=lambda state, batch: (state, {"loss": 0.0}),
+            train_state={}, batch_iter=itertools.repeat({}),
+            profile=dp_profile("tiny", compute_s=compute_s, comm_s=comm_s),
+            engine=engine, cfg=SpecInFConfig(), decode_microstep_s=0.004,
+            faults=faults,
+        )
+        metrics = rt.run(num_iterations=num_iterations)
+        return rt, metrics
+
+    rows = [("micro", "resil:train_virtual_time_s(collocated)",
+             "no_serving_baseline", "s", round(baseline_s, 6))]
+    inj = FaultInjector(seed=4, specs=(
+        FaultSpec("runtime/early_resume", probability=1.0, max_fires=2),
+    ))
+    for policy, faults in (("fault_free", None), ("early_resume", inj)):
+        rt, metrics = run(faults)
+        rows.append(("micro", "resil:train_virtual_time_s(collocated)",
+                     policy, "s", round(metrics.virtual_time_s, 6)))
+        if faults is not None:
+            h = rt.engine.obs.metrics.histogram("fault/revocation_overrun_s")
+            worst = max(h.values()) if h.count else 0.0
+            rows.append(("micro", "resil:early_resumes(collocated)", policy,
+                         "count",
+                         rt.engine.obs.metrics.counter(
+                             "fault/early_resume").value))
+            rows.append(("micro", "resil:early_resume_overrun_ms", policy,
+                         "ms", round(worst * 1e3, 3)))
+    return rows
+
+
 def all_rows():
     return (
         bench_engine_microstep()
@@ -573,4 +791,7 @@ def all_rows():
         + bench_chunked_prefill()
         + bench_observability()
         + bench_control_plane()
+        + bench_degradation()
+        + bench_revocation()
+        + bench_early_resume()
     )

@@ -21,6 +21,12 @@ rows, so they are exact, not noise-tolerant):
 * unified chunked prefill compiles a small constant number of prefill
   programs (one fixed-width program per model).
 
+Resilience gates (DESIGN.md §9; deterministic virtual-clock rows): the
+overload ladder must not worsen served-online p95 under a 10x burst and
+must actually shed, and a revocable grant must yield within one
+sub-dispatch of the revocation signal while the monolithic comparison
+row still overruns (workload-staleness guard).
+
     python scripts/check_bench_regression.py [BENCH_engine.json]
 """
 from __future__ import annotations
@@ -141,6 +147,66 @@ def main() -> int:
         return 1
     if dropped != 0:
         print("FAIL: the tracer dropped events at bench scale")
+        return 1
+
+    # --- resilience gates (DESIGN.md §9; deterministic rows) -----------
+    # bench_degradation runs the same bursty workload with and without the
+    # overload ladder; bench_revocation raises the revocation signal
+    # mid-quantum against a revocable vs a monolithic grant.  All rows are
+    # virtual-clock deterministic, so the comparisons are exact.
+    l_p95 = by_policy.get(("resil:online_p95_ms(burst)", "ladder"))
+    n_p95 = by_policy.get(("resil:online_p95_ms(burst)", "no_ladder"))
+    shed = by_policy.get(("resil:shed_fraction(burst)", "ladder"))
+    r_over = by_policy.get(("resil:revocation_overrun_ms", "revocable"))
+    m_over = by_policy.get(("resil:revocation_overrun_ms", "monolithic"))
+    bound = by_policy.get(("resil:revocation_overrun_bound_ms", "revocable"))
+    if None in (l_p95, n_p95, shed, r_over, m_over, bound):
+        print(f"check_bench_regression: resilience rows missing from {path}")
+        return 1
+    print(f"burst online p95: ladder {l_p95:.2f} ms vs no-ladder "
+          f"{n_p95:.2f} ms (shed fraction {shed}); revocation overrun "
+          f"{r_over} ms (bound {bound} ms) vs monolithic {m_over} ms")
+    if l_p95 > n_p95:
+        print("FAIL: the overload ladder made served-online p95 WORSE "
+              "under the burst")
+        return 1
+    if shed <= 0:
+        print("FAIL: the ladder never shed under a 10x burst — the "
+              "escalation path is dead")
+        return 1
+    if r_over > bound:
+        print("FAIL: a revocable grant overran the documented one-"
+              "sub-dispatch yield bound")
+        return 1
+    if m_over <= bound:
+        print("FAIL: the monolithic row no longer overruns the bound — "
+              "the revocation workload has gone stale")
+        return 1
+    base_vt = by_policy.get(
+        ("resil:train_virtual_time_s(collocated)", "no_serving_baseline")
+    )
+    ff_vt = by_policy.get(
+        ("resil:train_virtual_time_s(collocated)", "fault_free")
+    )
+    er_vt = by_policy.get(
+        ("resil:train_virtual_time_s(collocated)", "early_resume")
+    )
+    resumes = by_policy.get(("resil:early_resumes(collocated)",
+                             "early_resume"))
+    if None in (base_vt, ff_vt, er_vt, resumes):
+        print(f"check_bench_regression: early-resume rows missing from "
+              f"{path}")
+        return 1
+    print(f"training virtual time: no-serving baseline {base_vt}s, "
+          f"collocated fault-free {ff_vt}s, under {resumes} early "
+          f"resume(s) {er_vt}s")
+    if not (er_vt <= base_vt and ff_vt <= base_vt):
+        print("FAIL: training step time under revocation exceeded the "
+              "no-serving baseline — serving overran into training")
+        return 1
+    if resumes < 1:
+        print("FAIL: the early-resume workload injected no resumes — "
+              "the revocation-throughput gate has gone stale")
         return 1
     print("OK")
     return 0

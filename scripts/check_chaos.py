@@ -1,0 +1,258 @@
+"""CI gate: seeded chaos sweep over the failure-containment machinery
+(DESIGN.md §9).
+
+Two deterministic sweeps, both on the virtual clock so every run is
+reproducible from its seed alone:
+
+* **Serving sweep** — a mixed online/offline workload drains through
+  ``EngineCore.step()`` with every serving-side fault point armed at
+  once (NaN logits, transient page-allocation failures, mid-quantum
+  revocation, slow-step overruns).  Pass criteria per seed:
+
+  - zero crashes: the drain completes without an exception or a hang;
+  - containment: every request reaches a terminal state, and every
+    request that finished normally (not shed/expired, not past its
+    retry budget) produced a token stream BYTE-IDENTICAL to the
+    fault-free reference run;
+  - attribution: the step tracer's SLO segments still telescope to
+    end-to-end latency (max residual <= 1e-6) and no events dropped —
+    faults must not corrupt the observability layer.
+
+* **Early-resume sweep** — a collocated ``SpecInFRuntime`` run where
+  training resumes before the predicted bubble end.  The armed
+  revocation must yield the GPU within the documented bound (one
+  sub-dispatch of ``revocation_check_steps`` microsteps, 3x slack for
+  window granularity) and training's virtual step time must equal the
+  no-serving baseline exactly — revocation is how serving pays for the
+  overrun, so training never does.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python scripts/check_chaos.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import SpecInFConfig  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.obs import Observability  # noqa: E402
+from repro.resilience import FaultInjector, FaultSpec  # noqa: E402
+from repro.serving.core import (  # noqa: E402
+    Grant,
+    Priority,
+    RevocationSignal,
+    SamplingParams,
+)
+from repro.serving.engine import InferenceEngine, Request  # noqa: E402
+
+SERVE_SEEDS = (1, 2, 3, 4, 5)
+RESUME_SEEDS = (1, 2, 3)
+STEP_S = 0.002
+MAX_QUANTA = 5000  # drain cap: exceeding it counts as a hang (a crash)
+ATTRIBUTION_TOL = 1e-6
+
+CFG = configs.smoke_config("qwen3-1.7b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+
+#: every serving-side fault point, armed together — containment domains
+#: must hold when faults overlap, not just one family at a time
+SERVE_SPECS = (
+    FaultSpec("engine/nan_logits", probability=0.05, max_fires=3),
+    FaultSpec("pool/alloc_fail", probability=0.05, after=2, max_fires=3),
+    FaultSpec("core/revoke_mid_quantum", probability=0.05, max_fires=3),
+    FaultSpec("core/step_overrun", probability=0.05, max_fires=3),
+)
+
+#: finish reasons whose token streams must match the fault-free run;
+#: "expired" (shed / queue deadline) and "error" (retry budget spent)
+#: are legitimate chaos outcomes and are reported, not compared
+CLEAN_REASONS = ("length", "stop")
+
+
+def serve_run(injector):
+    """Drain the fixed mixed workload; returns (engine, requests)."""
+    vnow = [0.0]
+    engine = InferenceEngine(
+        CFG, PARAMS, max_slots=2, max_seq=128, clock=lambda: vnow[0],
+        kv_pool_pages=24, obs=Observability(tracing=True),
+        fault_injector=injector,
+    )
+    core = engine.core
+    core.fault_backoff_s = 0.0  # virtual-clock run: retry immediately
+    rng = np.random.default_rng(0)
+    reqs = [
+        core.submit(
+            rng.integers(0, CFG.vocab_size, 8),
+            SamplingParams(max_new_tokens=16),
+            priority=Priority.OFFLINE, arrival_time=0.0,
+        )
+        for _ in range(4)
+    ]
+    for t in np.cumsum(rng.exponential(0.01, 6)):
+        reqs.append(core.submit(
+            rng.integers(0, CFG.vocab_size, 8),
+            SamplingParams(max_new_tokens=4, deadline_s=5.0),
+            priority=Priority.ONLINE, arrival_time=float(t),
+        ))
+    quanta = 0
+    while core.has_unfinished:
+        quanta += 1
+        if quanta > MAX_QUANTA:
+            raise RuntimeError(
+                f"drain exceeded {MAX_QUANTA} quanta — containment hang"
+            )
+        base = vnow[0]
+        out = core.step(Grant(
+            now=base, token_budget=16,
+            revocation=RevocationSignal(), revoke_check_steps=2,
+            advance_clock=lambda steps, b=base: vnow.__setitem__(
+                0, b + steps * STEP_S
+            ),
+        ))
+        if out.cost_steps == 0 and not out.admitted:
+            vnow[0] += STEP_S  # idle until the next arrival
+    return engine, reqs
+
+
+def check_attribution(engine) -> float:
+    tr = engine.obs.tracer
+    if tr.dropped:
+        raise AssertionError(f"tracer dropped {tr.dropped} events")
+    resid = [
+        abs(ra.total - (ra.finish_time - ra.arrival_time))
+        for ra in tr.attribution().values()
+        if ra.finish_time is not None
+    ]
+    return max(resid) if resid else 0.0
+
+
+def serve_sweep() -> int:
+    ref_engine, ref = serve_run(None)
+    assert all(r.finish_reason in CLEAN_REASONS for r in ref), (
+        "fault-free reference must finish every request normally"
+    )
+    failures = 0
+    for seed in SERVE_SEEDS:
+        inj = FaultInjector(seed=seed, specs=SERVE_SPECS)
+        try:
+            engine, reqs = serve_run(inj)
+        except Exception:
+            traceback.print_exc()
+            print(f"FAIL seed={seed}: chaos run crashed")
+            failures += 1
+            continue
+        unfinished = [r for r in reqs if not r.state.finished]
+        mismatched = [
+            i for i, (r, rr) in enumerate(zip(reqs, ref))
+            if r.finish_reason in CLEAN_REASONS
+            and (r.finish_reason != rr.finish_reason
+                 or r.output_tokens != rr.output_tokens)
+        ]
+        resid = check_attribution(engine)
+        clean = sum(r.finish_reason in CLEAN_REASONS for r in reqs)
+        errors = sum(r.finish_reason == "error" for r in reqs)
+        expired = sum(r.finish_reason == "expired" for r in reqs)
+        print(
+            f"seed={seed}: fires={inj.fires} clean={clean}/{len(reqs)} "
+            f"error={errors} expired={expired} "
+            f"attribution_residual={resid:.2e}"
+        )
+        if unfinished:
+            print(f"FAIL seed={seed}: {len(unfinished)} requests never "
+                  f"reached a terminal state")
+            failures += 1
+        if mismatched:
+            print(f"FAIL seed={seed}: requests {mismatched} finished "
+                  f"normally but diverged from the fault-free reference")
+            failures += 1
+        if resid > ATTRIBUTION_TOL:
+            print(f"FAIL seed={seed}: SLO attribution residual {resid} "
+                  f"> {ATTRIBUTION_TOL}")
+            failures += 1
+    return failures
+
+
+def resume_sweep() -> int:
+    from repro.core import SpecInFRuntime
+    from repro.core.profiles import dp_profile
+
+    iterations = 4
+    compute_s, comm_s = 0.02, 0.04
+    baseline_s = iterations * (compute_s + comm_s * 0.7)  # overlap 0.3
+    failures = 0
+    for seed in RESUME_SEEDS:
+        eng = InferenceEngine(CFG, PARAMS, max_slots=2, max_seq=128)
+        for _ in range(2):
+            eng.add_request(Request(prompt=np.arange(8),
+                                    max_new_tokens=1000))
+        inj = FaultInjector(seed=seed, specs=(
+            FaultSpec("runtime/early_resume", probability=0.5, max_fires=2),
+        ))
+        rt = SpecInFRuntime(
+            train_step=lambda s, b: (s, {}),
+            train_state=None,
+            batch_iter=iter(lambda: {}, None),
+            profile=dp_profile("tiny", compute_s=compute_s, comm_s=comm_s),
+            engine=eng,
+            cfg=SpecInFConfig(),
+            decode_microstep_s=0.004,
+            faults=inj,
+        )
+        try:
+            rt.run(num_iterations=iterations)
+        except Exception:
+            traceback.print_exc()
+            print(f"FAIL seed={seed}: early-resume run crashed")
+            failures += 1
+            continue
+        m = eng.obs.metrics
+        fires = inj.fires.get("runtime/early_resume", 0)
+        resumed = m.counter("fault/early_resume").value
+        h = m.histogram("fault/revocation_overrun_s")
+        worst = max(h.values()) if h.count else 0.0
+        bound = rt.decode_microstep_s * 3  # one sub-dispatch + granularity
+        print(f"seed={seed}: early_resumes={resumed}/{fires} "
+              f"worst_overrun={worst * 1e3:.3f} ms "
+              f"(bound {bound * 1e3:.1f} ms) "
+              f"train_virtual={rt.metrics.virtual_time_s:.4f} s "
+              f"(baseline {baseline_s:.4f} s)")
+        if resumed != fires:
+            print(f"FAIL seed={seed}: {fires} injected early resumes but "
+                  f"{resumed} recorded")
+            failures += 1
+        if worst > bound + 1e-9:
+            print(f"FAIL seed={seed}: revocation overran the yield bound")
+            failures += 1
+        if abs(rt.metrics.virtual_time_s - baseline_s) > 1e-9:
+            print(f"FAIL seed={seed}: training step time diverged from "
+                  f"the no-serving baseline under revocation")
+            failures += 1
+        if rt.metrics.train_iterations != iterations:
+            print(f"FAIL seed={seed}: training did not run to completion")
+            failures += 1
+    return failures
+
+
+def main() -> int:
+    print(f"serving chaos sweep: seeds {SERVE_SEEDS}, "
+          f"{len(SERVE_SPECS)} fault points armed")
+    failures = serve_sweep()
+    print(f"early-resume sweep: seeds {RESUME_SEEDS}")
+    failures += resume_sweep()
+    if failures:
+        print(f"FAIL: {failures} chaos check(s) failed")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -313,6 +313,15 @@ class SpecInFConfig:
     #: bucket prefill.
     prefill_token_cost_steps: float = 0.0
 
+    # --- revocable grants (failure model, DESIGN.md §9) ---
+    #: Decode microsteps between revocation checks inside one quantum.  0
+    #: keeps the pre-§9 single-dispatch step (a grant, once issued, always
+    #: runs to completion).  >0 splits the fused decode/spec loop into
+    #: sub-dispatches of at most this many microsteps and re-checks
+    #: ``Grant.revocation`` between them, bounding how many tokens a
+    #: quantum can run past the instant training resumes.
+    revocation_check_steps: int = 0
+
 
 # ---------------------------------------------------------------------------
 # Speculative decoding (draft / target pairing)

@@ -22,6 +22,8 @@ class BubbleMonitor:
         self.cfg = cfg
         self.window = collections.deque(maxlen=cfg.window_len)
         self._zero_run = 0
+        #: out-of-band early-resume notices (DESIGN.md §9)
+        self.interrupts = 0
 
     def observe(self, activity_count: int) -> int:
         """Record one window's activity count; returns current zero-count Z_c."""
@@ -35,6 +37,15 @@ class BubbleMonitor:
     @property
     def zero_count(self) -> int:
         return self._zero_run
+
+    def notice_activity(self) -> None:
+        """Out-of-band activity notice (DESIGN.md §9): called the moment
+        training resumes *inside* a span the profile predicted idle —
+        e.g. on a revoked grant — so the zero run is cut immediately
+        instead of waiting for the next window-boundary ``observe``.
+        Algorithm 1 then sees Z_c = 0 and stops granting."""
+        self.interrupts += 1
+        self._zero_run = 0
 
     def utilization(self) -> float:
         """Fraction of recent windows with activity (diagnostics only)."""
@@ -50,6 +61,7 @@ class BubbleMonitor:
             "zero_count": self._zero_run,
             "windows": len(self.window),
             "utilization": self.utilization(),
+            "interrupts": self.interrupts,
         }
 
     def reset(self) -> None:

@@ -43,10 +43,12 @@ from repro.core.profiles import IterationProfile
 from repro.core.scheduler import AdaptiveKernelScheduler, Status
 from repro.obs import Observability
 from repro.obs.trace import _num as _jnum
+from repro.resilience.faults import FaultInjector
 from repro.serving.core import (
     Grant,
     Priority,
     RequestState,
+    RevocationSignal,
     SamplingParams,
     SchedulerPolicy,
     StepOutputs,
@@ -191,7 +193,7 @@ class SpecInFPolicy(SchedulerPolicy):
         if grant.online_ok:
             admit += [
                 cr for cr in core.waiting[Priority.ONLINE]
-                if cr.arrival_time <= grant.now
+                if self.eligible(cr, grant)
             ]
         offline_grant_ok = grant.tokens >= self.min_offline_grant(
             core, grant.phase
@@ -199,7 +201,7 @@ class SpecInFPolicy(SchedulerPolicy):
         if offline_grant_ok:
             admit += [
                 cr for cr in core.waiting[Priority.OFFLINE]
-                if cr.arrival_time <= grant.now
+                if self.eligible(cr, grant)
             ]
         plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
         online = [
@@ -268,6 +270,7 @@ class SpecInFRuntime:
         cfg: SpecInFConfig = SpecInFConfig(),
         decode_microstep_s: float = 0.005,
         gamma_controller: Optional[AdaptiveGammaController] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         self.train_step = train_step
         self.state = train_state
@@ -275,6 +278,17 @@ class SpecInFRuntime:
         self.profile = profile
         self.engine = engine
         self.cfg = cfg
+        # Seeded chaos (DESIGN.md §9): one injector shared by every fault
+        # point in the stack — the runtime consults ``runtime/early_resume``
+        # per bubble, and the same instance is handed down to the engine and
+        # page pool so a single seed reproduces the whole fault schedule.
+        self.faults = faults
+        if faults is not None and engine is not None:
+            faults.metrics = engine.obs.metrics
+            if engine.fault_injector is None:
+                engine.fault_injector = faults
+                if engine.pool is not None:
+                    engine.pool.fault_injector = faults
         self.monitor = BubbleMonitor(cfg)
         self.scheduler = AdaptiveKernelScheduler(cfg, num_instances=1)
         # metrics share the engine's registry (DESIGN.md §8): the core
@@ -374,7 +388,13 @@ class SpecInFRuntime:
         arrival is capacity-blocked), pick the k bucket / draft length, and
         drive the fused loop.  The step's cost in microstep-equivalents
         advances the virtual clock and the monitor window count — the same
-        accounting whether the quantum was plain or speculative."""
+        accounting whether the quantum was plain or speculative.
+
+        Revocation (DESIGN.md §9): when the bubble's ``RevocationSignal``
+        is armed (seeded early-resume chaos) every grant carries it — a
+        revoked quantum ends the fill immediately, the overrun past the
+        resume instant is recorded, and the rest of the span is fed to the
+        monitor as training activity."""
         if self.engine is None:
             self.metrics.virtual_time_s += bubble_s
             self._advance_windows(bubble_s, activity=0)
@@ -382,11 +402,16 @@ class SpecInFRuntime:
         now = self.metrics.virtual_time_s
         tracer = self.engine.obs.tracer
         tracer.span("bubble", "train", now, now + bubble_s, span_s=bubble_s)
+        sig, resume_at = self._arm_revocation(now, bubble_s)
         spent = 0.0
         step_cost = self.decode_microstep_s
+        revoked = False
         while spent < bubble_s:
-            d = self._observe_windows(1)
             base = now + spent
+            if sig is not None and sig.check(base):
+                revoked = True  # revoked on a quantum boundary: run nothing
+                break
+            d = self._observe_windows(1)
             self._vnow = base  # admission/TTFT stamps land at quantum start
             # the monitor/Algorithm-1 state behind this quantum's grant —
             # the core folds it into the quantum trace event
@@ -408,9 +433,14 @@ class SpecInFRuntime:
                 advance_clock=lambda steps, _b=base: setattr(
                     self, "_vnow", _b + steps * step_cost
                 ),
+                revocation=sig,
+                revoke_check_steps=max(self.cfg.revocation_check_steps, 1),
             )
             out = self.core.step(grant)
             if out.cost_steps <= 0:
+                if out.revoked:
+                    revoked = True
+                    break
                 spent += self._window_s
                 continue
             dt = out.cost_steps * step_cost
@@ -420,8 +450,51 @@ class SpecInFRuntime:
             quanta = max(out.k, int(round(out.cost_steps)))
             self._observe_windows(quanta - 1)
             self._record_step(out)
+            if out.revoked or (sig is not None and sig.check(self._vnow)):
+                # cut mid-plan, or tripped right as the quantum completed
+                revoked = True
+                break
+        if not revoked and sig is not None and sig.check(now + bubble_s):
+            # armed inside the span but no quantum was running to cut
+            # (tiny bubble, or no grant) — the early resume still happened
+            revoked = True
+        if revoked:
+            m = self.engine.obs.metrics
+            m.counter("fault/early_resume").inc()
+            m.histogram("fault/revocation_overrun_s").record(
+                max(0.0, self._vnow - resume_at)
+            )
+            self.monitor.notice_activity()
+            remaining = bubble_s - spent
+            if remaining > 0:
+                # training owns the rest of the span: the monitor sees it
+                # as active windows, so Algorithm 1 stops granting
+                self._advance_windows(remaining, activity=1)
         self.metrics.virtual_time_s += bubble_s
         self._vnow = self.metrics.virtual_time_s
+
+    def _arm_revocation(self, now: float, bubble_s: float):
+        """Build this bubble's revocation signal (DESIGN.md §9).
+
+        Chaos: when the injector fires ``runtime/early_resume``, training
+        is declared to resume at a seeded fraction (25–75%) of the
+        profiled bubble — the signal is armed at that virtual instant,
+        and ``EngineCore.step`` must yield within the documented token
+        bound once it trips.  Without a fault, a signal is still attached
+        whenever ``cfg.revocation_check_steps > 0`` (unarmed, never
+        fires) so the sub-dispatch path is exercised; under the default
+        config grants carry no signal and the single-dispatch quantum is
+        byte-identical to pre-§9 behavior."""
+        faults = self.faults
+        if faults is not None and faults.should_fire("runtime/early_resume"):
+            frac = 0.25 + 0.5 * faults.uniform("runtime/early_resume")
+            resume_at = now + frac * bubble_s
+            sig = RevocationSignal()
+            sig.arm(resume_at, reason="early_resume")
+            return sig, resume_at
+        if self.cfg.revocation_check_steps > 0:
+            return RevocationSignal(), math.inf
+        return None, math.inf
 
     def _record_step(self, out: StepOutputs) -> None:
         """Fold one quantum's StepOutputs into the RUN-LOCAL metrics.  The

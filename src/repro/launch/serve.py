@@ -37,13 +37,21 @@ def summarize(engine: InferenceEngine) -> list:
     lines = []
     reasons = {
         r: m.counter(f"core/finish_reason/{r}").value
-        for r in ("stop", "length", "abort")
+        for r in ("stop", "length", "abort", "expired", "error")
     }
     lines.append(
         "[serve] finish reasons: "
         + " ".join(f"{k}={v}" for k, v in reasons.items())
         + f"; preemptions={m.counter('core/preemptions').value}"
     )
+    shed = (m.counter("fault/shed/online").value
+            + m.counter("fault/shed/offline").value)
+    if reasons["expired"] or shed:
+        lines.append(
+            f"[serve] degradation: expired={reasons['expired']} "
+            f"(shed {shed}); starved_quanta="
+            f"{m.counter('core/starved_quanta').value}"
+        )
     peaks = []
     for name in (
         "core/queue_depth/online", "core/queue_depth/offline",
@@ -75,6 +83,10 @@ def main() -> None:
     ap.add_argument("--mean-interval-ms", type=float, default=20.0)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument(
+        "--deadline-ms", type=float, default=None,
+        help="queue TTL per request; WAITING past it finishes 'expired'",
+    )
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -101,7 +113,13 @@ def main() -> None:
     requests = [
         core.submit(
             rng.integers(0, cfg.vocab_size, args.prompt_len),
-            SamplingParams(max_new_tokens=args.max_new_tokens),
+            SamplingParams(
+                max_new_tokens=args.max_new_tokens,
+                deadline_s=(
+                    None if args.deadline_ms is None
+                    else args.deadline_ms / 1e3
+                ),
+            ),
             priority=Priority.ONLINE,
             arrival_time=float(arrivals[i]),
         )

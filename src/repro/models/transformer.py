@@ -566,23 +566,29 @@ def decode_loop(
     batch; used by the fused collocated train+decode step, where the cache
     index may be scalar).
 
-    Returns ``(tokens, cache, remaining, toks_seq, steps)`` where
+    Returns ``(tokens, cache, remaining, toks_seq, steps, bad)`` where
     ``toks_seq[j]`` is the [B] token vector after microstep ``j`` (frozen
-    slots repeat their last token) and ``steps[i]`` counts microsteps slot
-    ``i`` was active for.  The caller fetches everything it needs with ONE
-    device->host transfer after the loop.
+    slots repeat their last token), ``steps[i]`` counts microsteps slot
+    ``i`` was active for, and ``bad[i]`` is the per-slot NaN screen
+    (DESIGN.md §9): True if any microstep produced a non-finite logit for
+    an *active* slot ``i`` — its tokens from this loop are garbage and the
+    caller must quarantine the slot instead of absorbing them.  Inactive
+    slots are never flagged (an empty slot's logits are unread noise).
+    The caller fetches everything it needs with ONE device->host transfer
+    after the loop.
     """
     b = tokens.shape[0]
     masked = remaining is not None
 
     def body(carry, _):
-        toks, c, rem = carry
+        toks, c, rem, bad = carry
         idx = c["index"]
         logits, new_c = decode_step(
             cfg, params, toks, c, compute_dtype=compute_dtype,
             attn_impl=attn_impl,
         )
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        finite = jnp.isfinite(logits).all(axis=-1)
         if masked:
             active = rem > 0
             if max_seq is not None:
@@ -595,16 +601,18 @@ def decode_loop(
         else:
             toks, c = next_tok, new_c
             active = jnp.ones((b,), bool)
-        return (toks, c, rem), (toks, active)
+        bad = bad | (active & ~finite)
+        return (toks, c, rem, bad), (toks, active)
 
     rem0 = remaining if masked else jnp.zeros((b,), jnp.int32)
-    (tokens, cache, rem), (toks_seq, active_seq) = jax.lax.scan(
-        body, (tokens, cache, rem0), None, length=k
+    bad0 = jnp.zeros((b,), bool)
+    (tokens, cache, rem, bad), (toks_seq, active_seq) = jax.lax.scan(
+        body, (tokens, cache, rem0, bad0), None, length=k
     )
     steps = active_seq.sum(axis=0).astype(jnp.int32) if k else jnp.zeros(
         (b,), jnp.int32
     )
-    return tokens, cache, rem, toks_seq, steps
+    return tokens, cache, rem, toks_seq, steps, bad
 
 
 # ---------------------------------------------------------------------------

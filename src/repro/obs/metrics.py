@@ -62,10 +62,31 @@ STABLE_NAMES = {
     "core/finish_reason/stop": "counter",
     "core/finish_reason/length": "counter",
     "core/finish_reason/abort": "counter",
+    "core/finish_reason/expired": "counter",
+    "core/finish_reason/error": "counter",
     "core/finished/online": "counter",
     "core/finished/offline": "counter",
     "core/generated_tokens/online": "counter",
     "core/generated_tokens/offline": "counter",
+    "core/starved_quanta": "counter",
+    # failure containment + graceful degradation (DESIGN.md §9)
+    "fault/injected": "counter",
+    "fault/nan_quarantines": "counter",
+    "fault/alloc_failures": "counter",
+    "fault/requeues": "counter",
+    "fault/retry_exhausted": "counter",
+    "fault/revocations": "counter",
+    "fault/early_resume": "counter",
+    "fault/shed/online": "counter",
+    "fault/shed/offline": "counter",
+    "fault/ladder_escalations": "counter",
+    "fault/ladder_steps/normal": "counter",
+    "fault/ladder_steps/spec_off": "counter",
+    "fault/ladder_steps/k_shrink": "counter",
+    "fault/ladder_steps/shed_offline": "counter",
+    "fault/ladder_steps/shed_online": "counter",
+    "fault/ladder_stage": "gauge",
+    "fault/revocation_overrun_s": "histogram",
     # per-quantum gauges
     "core/queue_depth/online": "gauge",
     "core/queue_depth/offline": "gauge",

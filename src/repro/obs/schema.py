@@ -47,6 +47,7 @@ META_SCHEMA = {"version": int, "events": int, "dropped": int}
 TRANSITION_STATES = {
     "waiting", "prefilling", "running", "preempted",
     "finished_stopped", "finished_length", "finished_aborted",
+    "finished_expired", "finished_error",
 }
 
 

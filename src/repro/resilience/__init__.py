@@ -1,0 +1,34 @@
+"""Failure containment and graceful degradation (DESIGN.md §9).
+
+Three pieces, all host-side and deterministic on the virtual clock:
+
+* ``faults`` — the seeded fault-injection harness (named fault points,
+  per-point independent streams) chaos runs are built from;
+* ``degradation`` — the hysteretic overload ladder ``EngineCore``
+  consults each quantum (spec off -> k shrink -> offline shedding ->
+  online deadline shedding);
+* the containment machinery itself lives where the faults land:
+  per-slot NaN screens in the fused loops (``serving/engine.py``),
+  ``PageAllocError`` handling in ``serving/kv_pool.py``, revocable
+  grants in ``serving/core.py``, early-resume handling in
+  ``core/filling.py``.
+"""
+from repro.resilience.degradation import (  # noqa: F401
+    LadderConfig,
+    LadderStage,
+    OverloadLadder,
+)
+from repro.resilience.faults import (  # noqa: F401
+    FAULT_POINTS,
+    FaultInjector,
+    FaultSpec,
+)
+
+__all__ = [
+    "FAULT_POINTS",
+    "FaultInjector",
+    "FaultSpec",
+    "LadderConfig",
+    "LadderStage",
+    "OverloadLadder",
+]

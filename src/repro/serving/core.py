@@ -56,6 +56,7 @@ __all__ = [
     "EngineRequest",
     "RequestOutput",
     "RequestState",
+    "RevocationSignal",
     "SamplingParams",
     "SchedulerPolicy",
     "StepOutputs",
@@ -84,6 +85,13 @@ class RequestState(enum.Enum):
     FINISHED_STOPPED = "finished_stopped"
     FINISHED_LENGTH = "finished_length"
     FINISHED_ABORTED = "finished_aborted"
+    #: deadline (``SamplingParams.deadline_s``) elapsed while WAITING, or
+    #: the overload ladder shed the request before it took a slot
+    #: (DESIGN.md §9) — the request never consumed device compute
+    FINISHED_EXPIRED = "finished_expired"
+    #: fault-containment gave up: the request was quarantined more times
+    #: than the core's retry budget allows (DESIGN.md §9)
+    FINISHED_ERROR = "finished_error"
 
     @property
     def finished(self) -> bool:
@@ -95,6 +103,8 @@ FINISH_REASONS = {
     RequestState.FINISHED_STOPPED: "stop",
     RequestState.FINISHED_LENGTH: "length",
     RequestState.FINISHED_ABORTED: "abort",
+    RequestState.FINISHED_EXPIRED: "expired",
+    RequestState.FINISHED_ERROR: "error",
 }
 
 
@@ -109,6 +119,11 @@ class SamplingParams:
 
     max_new_tokens: int = 16
     stop_token_ids: tuple[int, ...] = ()
+    #: queue TTL in engine-clock seconds, measured from ``arrival_time``.
+    #: A WAITING request whose deadline elapses finishes FINISHED_EXPIRED
+    #: without ever taking a slot; a request already in a slot is never
+    #: expired mid-flight.  None = no deadline.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -132,6 +147,11 @@ class EngineRequest:
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
     preemptions: int = 0
+    #: fault-containment bookkeeping (DESIGN.md §9): quarantines survived,
+    #: and the engine-clock instant before which admission must not retry
+    #: (exponential backoff after each quarantine)
+    faults: int = 0
+    retry_at: float = 0.0
     # -- core internals --
     _internal: Optional[Request] = None  # engine-side record while RUNNING
     _consumed: int = 0  # tokens of _internal.generated already absorbed
@@ -140,6 +160,43 @@ class EngineRequest:
     @property
     def remaining_budget(self) -> int:
         return self.sampling.max_new_tokens - len(self.output_tokens)
+
+
+class RevocationSignal:
+    """A grant's kill switch (DESIGN.md §9).
+
+    The runtime raises it — immediately via ``revoke()``, or ahead of time
+    via ``arm(at)`` when it knows the engine-clock instant training resumes
+    — and ``EngineCore.step()`` re-checks it between decode sub-dispatches
+    (``Grant.revoke_check_steps`` microsteps apart), yielding the GPU within
+    a bounded number of tokens instead of running the quantum to
+    completion.  Latching: once ``check()`` has observed the revocation it
+    stays revoked for the signal's lifetime."""
+
+    def __init__(self) -> None:
+        self._revoked = False
+        self.revoke_at = math.inf
+        self.reason: Optional[str] = None
+
+    def revoke(self, reason: str = "revoked") -> None:
+        self._revoked = True
+        self.reason = self.reason or reason
+
+    def arm(self, at: float, reason: str = "early_resume") -> None:
+        """Schedule revocation at engine-clock instant ``at`` (earliest
+        armed instant wins)."""
+        if at < self.revoke_at:
+            self.revoke_at = at
+            self.reason = reason
+
+    def check(self, now: float) -> bool:
+        if not self._revoked and now >= self.revoke_at:
+            self._revoked = True
+        return self._revoked
+
+    @property
+    def revoked(self) -> bool:
+        return self._revoked
 
 
 @dataclasses.dataclass
@@ -166,6 +223,16 @@ class Grant:
     max_cost_steps: float = math.inf
     token_budget: float = math.inf
     advance_clock: Optional[Callable[[float], None]] = None
+    #: revocation kill switch (DESIGN.md §9).  None (the default) keeps
+    #: the historical contract — a grant, once issued, runs its quantum to
+    #: completion in one fused dispatch.  Set, the decode loop splits into
+    #: sub-dispatches of ``revoke_check_steps`` microsteps and re-checks
+    #: the signal between them, so ``step()`` yields within
+    #: ``revoke_check_steps * slots * (gamma + 1)`` tokens of the signal
+    #: being raised (plus at most the quantum's already-planned prefill
+    #: chunk tokens when revoked mid-wave).
+    revocation: Optional[RevocationSignal] = None
+    revoke_check_steps: int = 1
 
 
 @dataclasses.dataclass
@@ -217,6 +284,10 @@ class StepOutputs:
     prefill_tokens: int = 0
     spec_accepted: int = 0
     spec_proposed: int = 0
+    #: True when the grant's revocation signal cut this quantum short —
+    #: ``k`` and ``cost_steps`` then reflect the microsteps actually run,
+    #: not the plan (exact partial-quantum accounting, DESIGN.md §9)
+    revoked: bool = False
 
 
 def largest_bucket(n: int, buckets: tuple = DECODE_K_BUCKETS) -> int:
@@ -249,6 +320,14 @@ class SchedulerPolicy:
 
     def plan(self, core: "EngineCore", grant: Grant) -> StepPlan:
         raise NotImplementedError
+
+    @staticmethod
+    def eligible(cr: EngineRequest, grant: Grant) -> bool:
+        """Admission eligibility shared by every policy: the request has
+        arrived AND any fault-quarantine backoff (``retry_at``) has
+        elapsed — a quarantined request must not be re-admitted into the
+        very next quantum (DESIGN.md §9)."""
+        return cr.arrival_time <= grant.now and cr.retry_at <= grant.now
 
     def _clamp_k_to_budget(
         self, plan: StepPlan, core: "EngineCore", grant: Grant
@@ -368,12 +447,12 @@ class PriorityPolicy(SchedulerPolicy):
         if grant.online_ok:
             admit += [
                 cr for cr in core.waiting[Priority.ONLINE]
-                if cr.arrival_time <= grant.now
+                if self.eligible(cr, grant)
             ]
         if grant.tokens > 0:
             admit += [
                 cr for cr in core.waiting[Priority.OFFLINE]
-                if cr.arrival_time <= grant.now
+                if self.eligible(cr, grant)
             ]
         running = list(core.slot_requests.values())
         want = 0
@@ -448,6 +527,15 @@ class EngineCore:
         self.requests: dict = {}  # request_id -> EngineRequest
         self.slot_requests: dict = {}  # slot index -> EngineRequest (RUNNING)
         self._finished_buffer: list = []
+        #: optional graceful-degradation ladder (``repro.resilience``):
+        #: consulted each quantum to shed load and downshift the plan
+        #: under registry pressure (DESIGN.md §9)
+        self.ladder = None
+        #: fault containment (DESIGN.md §9): quarantines a request may
+        #: survive before FINISHED_ERROR, and the backoff base — retry n
+        #: waits ``fault_backoff_s * 2**(n-1)`` engine-clock seconds
+        self.max_fault_retries = 3
+        self.fault_backoff_s = 0.01
 
     # ------------------------------------------------------------------
     # Submission / queries
@@ -535,7 +623,20 @@ class EngineCore:
         # engine's layout-independent meter prices it identically to the
         # chunk waves, so cost accounting never depends on the layout
         m0 = eng.prefill_metered_tokens
-        plan = self.policy.plan(self, g)
+        self._expire_deadlines(g.now)
+        if g.token_budget <= 0:
+            # degenerate grant (DESIGN.md §9): an explicit no-op quantum —
+            # nothing is planned or driven, but the expiries above still
+            # land, the trace still records the quantum, and the
+            # starvation is counted instead of falling through to planning
+            self.obs.metrics.counter("core/starved_quanta").inc()
+            plan = StepPlan(prefill_tokens=0.0)
+        else:
+            if self.ladder is not None:
+                self.ladder.update(self, g)
+            plan = self.policy.plan(self, g)
+            if self.ladder is not None:
+                self.ladder.apply(self, g, plan)
         out = StepOutputs(k=0, gamma=None, cost_steps=0.0)
         for slot in list(plan.preempt):
             cr = self.preempt(slot)
@@ -589,14 +690,9 @@ class EngineCore:
         if pf_take > 0:
             eng._drive_prefill_chunks(plan.prefill_tokens)
         out.prefill_tokens = eng.prefill_metered_tokens - m0
-        cost = (plan.cost_steps if k > 0 else 0.0) + (
-            (out.prefill_tokens * plan.prefill_token_cost)
-        )
-        if (k > 0 or out.prefill_tokens > 0) and g.advance_clock is not None:
-            g.advance_clock(cost)
+        pf_cost = out.prefill_tokens * plan.prefill_token_cost
         ran_slots: dict = {}
         if k > 0:
-            out.k = k
             # the slots the fused loop will decode (for per-slot spans);
             # captured now because retirements mutate the map mid-loop
             ran_slots = {
@@ -604,12 +700,41 @@ class EngineCore:
                 for slot, cr in self.slot_requests.items()
                 if not eng.slot_prefilling(slot)
             }
-            if plan.gamma is not None and eng.spec_enabled:
-                out.gamma = plan.gamma
-                eng._drive_spec_loop(k, plan.gamma)
-            else:
-                eng._drive_decode_loop(k)
-        if k > 0 or out.prefill_tokens:
+        if g.revocation is None:
+            cost = (plan.cost_steps if k > 0 else 0.0) + pf_cost
+            if (k > 0 or out.prefill_tokens > 0) \
+                    and g.advance_clock is not None:
+                g.advance_clock(cost)
+            if k > 0:
+                out.k = k
+                if plan.gamma is not None and eng.spec_enabled:
+                    out.gamma = plan.gamma
+                    eng._drive_spec_loop(k, plan.gamma)
+                else:
+                    eng._drive_decode_loop(k)
+        else:
+            # revocable quantum (DESIGN.md §9): pay the prefill cost
+            # first, then decode in sub-dispatches, re-checking the
+            # signal between them — the quantum can stop mid-plan, with
+            # the clock and the plan re-priced to what actually ran
+            if out.prefill_tokens > 0 and g.advance_clock is not None:
+                g.advance_clock(pf_cost)
+            ran = self._drive_revocable(g, plan, k, out, pf_cost)
+            plan.cost_steps = ran * (plan.cost_steps / k) if k > 0 else 0.0
+            cost = plan.cost_steps + pf_cost
+        inj = eng.fault_injector
+        if (
+            inj is not None
+            and (out.k > 0 or out.prefill_tokens)
+            and inj.should_fire("core/step_overrun")
+        ):
+            # slow-step fault (DESIGN.md §9): the quantum takes 25-75%
+            # longer than priced — the overrun eats real bubble span, so
+            # the step-time bound checks see it
+            cost *= 1.25 + 0.5 * inj.uniform("core/step_overrun")
+            if g.advance_clock is not None:
+                g.advance_clock(cost)
+        if out.k > 0 or out.prefill_tokens:
             out.cost_steps = cost
         out.spec_accepted = eng.spec_accepted - a0
         out.spec_proposed = eng.spec_drafted - p0
@@ -629,12 +754,17 @@ class EngineCore:
         out.finished = list(self._finished_buffer)
         for cr in out.finished:
             touched.setdefault(cr.request_id, cr)
-            base.setdefault(cr.request_id, 0)
+            # queue-side finishes (expiry, load shedding) produced no
+            # tokens this step: their delta baseline is the full stream
+            base.setdefault(cr.request_id, len(cr.output_tokens))
             pri = cr.priority.value
             m.counter("core/finished/" + pri).inc()
-            m.histogram(f"core/{pri}_latency_s").record(
-                cr.finish_time - cr.arrival_time
-            )
+            if cr.finish_reason != "expired":
+                # served latency means completed work; shed/expired
+                # requests never ran and would poison the p95
+                m.histogram(f"core/{pri}_latency_s").record(
+                    cr.finish_time - cr.arrival_time
+                )
         for rid, cr in touched.items():
             new = cr.output_tokens[base.get(rid, 0):]
             ttft = None
@@ -658,6 +788,52 @@ class EngineCore:
         self._record_quantum(g, plan, out, ran_slots)
         self.policy.observe(out)
         return out
+
+    # ------------------------------------------------------------------
+    def _drive_revocable(
+        self, g: Grant, plan: StepPlan, k: int, out: StepOutputs,
+        pf_cost: float = 0.0,
+    ) -> int:
+        """Decode portion of a revocable quantum (DESIGN.md §9): run the
+        ``k`` planned microsteps as sub-dispatches of at most
+        ``g.revoke_check_steps`` microsteps, re-checking the revocation
+        signal (on the engine clock, which the per-sub-dispatch
+        ``advance_clock`` calls keep current for virtual-clock runtimes)
+        before each one.  Returns the microsteps actually run and stamps
+        ``out.k`` / ``out.gamma`` / ``out.revoked``.  The extra d2h sync
+        per sub-dispatch is the price of revocability — dedicated engines
+        keep the single-dispatch path by leaving ``Grant.revocation``
+        unset."""
+        eng = self.engine
+        sig = g.revocation
+        inj = eng.fault_injector
+        per_cost = (plan.cost_steps / k) if k > 0 else 0.0
+        spec = plan.gamma is not None and eng.spec_enabled
+        buckets = getattr(self.policy, "k_buckets", DECODE_K_BUCKETS)
+        check = max(int(g.revoke_check_steps), 1)
+        ran = 0
+        while ran < k and eng.num_active > eng.num_prefilling:
+            if inj is not None and inj.should_fire("core/revoke_mid_quantum"):
+                sig.revoke(reason="injected_revocation")
+            if sig.check(eng.clock()):
+                break
+            k_sub = min(largest_bucket(min(check, k - ran), buckets),
+                        k - ran)
+            if g.advance_clock is not None:
+                # absolute from quantum start: cumulative cost so far
+                g.advance_clock(pf_cost + (ran + k_sub) * per_cost)
+            if spec:
+                eng._drive_spec_loop(k_sub, plan.gamma)
+            else:
+                eng._drive_decode_loop(k_sub)
+            ran += k_sub
+        out.k = ran
+        if spec and ran > 0:
+            out.gamma = plan.gamma
+        if sig.revoked and ran < k:
+            out.revoked = True
+            self.obs.metrics.counter("fault/revocations").inc()
+        return ran
 
     # ------------------------------------------------------------------
     def stream(
@@ -856,7 +1032,7 @@ class EngineCore:
                 "token_budget": _jnum(g.token_budget),
             },
             k=out.k, gamma=out.gamma, cost_steps=out.cost_steps,
-            prefill_tokens=out.prefill_tokens,
+            prefill_tokens=out.prefill_tokens, revoked=out.revoked,
             admitted=list(out.admitted), preempted=list(out.preempted),
             finished=[cr.request_id for cr in out.finished],
             spec_accepted=out.spec_accepted,
@@ -914,6 +1090,66 @@ class EngineCore:
             self.engine.evict_slot(slot)
             cr._internal = None
             self._finish(cr, RequestState.FINISHED_STOPPED, self.engine.clock())
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Deadline sweep at quantum start (DESIGN.md §9): WAITING or
+        PREEMPTED requests whose ``SamplingParams.deadline_s`` elapsed
+        finish FINISHED_EXPIRED without ever taking a slot.  Requests
+        already in a slot are never expired mid-flight — their deadline
+        only mattered while they queued."""
+        for q in self.waiting.values():
+            expired = [
+                cr for cr in q
+                if cr.sampling.deadline_s is not None
+                and now >= cr.arrival_time + cr.sampling.deadline_s
+            ]
+            for cr in expired:
+                q.remove(cr)
+                self._finish(cr, RequestState.FINISHED_EXPIRED, now)
+
+    def shed(self, cr: EngineRequest, now: float, kind: str) -> None:
+        """Load-shed a queued request (overload ladder, DESIGN.md §9):
+        remove it from its WAITING queue and finish it FINISHED_EXPIRED.
+        ``kind`` labels the ``fault/shed/<kind>`` counter."""
+        try:
+            self.waiting[cr.priority].remove(cr)
+        except ValueError:
+            return
+        self.obs.metrics.counter("fault/shed/" + kind).inc()
+        self._finish(cr, RequestState.FINISHED_EXPIRED, now)
+
+    def _on_slot_fault(self, slot: int, internal: Request) -> None:
+        """Engine quarantine callback (DESIGN.md §9): the fused loop's
+        per-slot NaN screen flagged this slot, the engine scrubbed and
+        freed its KV, and the request must now be re-queued (front of its
+        class, exponential backoff) or — once its retry budget is spent —
+        finished FINISHED_ERROR.  Tokens from the poisoned dispatch were
+        never absorbed, so the retry's resumed stream stays byte-identical
+        to a fault-free run."""
+        cr = self.slot_requests.pop(slot, None)
+        if cr is None:
+            return
+        frm = cr.state.value
+        new = self._collect(cr)
+        cr._internal = None
+        cr.faults += 1
+        now = self.engine.clock()
+        if self._apply_stop(cr, new):
+            # the good tokens absorbed before the fault carried a stop
+            self._finish(cr, RequestState.FINISHED_STOPPED, now)
+            return
+        m = self.obs.metrics
+        if cr.faults > self.max_fault_retries:
+            m.counter("fault/retry_exhausted").inc()
+            self._finish(cr, RequestState.FINISHED_ERROR, now)
+            return
+        cr.retry_at = now + self.fault_backoff_s * 2 ** (cr.faults - 1)
+        cr.state = RequestState.PREEMPTED
+        m.counter("fault/requeues").inc()
+        self.obs.tracer.transition(
+            cr.request_id, frm, "preempted", now, priority=cr.priority.value,
+        )
+        self.waiting[cr.priority].appendleft(cr)
 
     def _on_slot_finished(self, slot: int, internal: Request) -> None:
         """Engine retirement callback (budget exhausted or max_seq horizon

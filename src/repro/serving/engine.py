@@ -81,7 +81,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, SpecDecodeConfig
 from repro.models import transformer as T
 from repro.obs import Observability
-from repro.serving.kv_pool import PagePool, RadixCache
+from repro.serving.kv_pool import PageAllocError, PagePool, RadixCache
 
 _req_counter = itertools.count()
 
@@ -185,11 +185,18 @@ class InferenceEngine:
         enable_prefix_cache: bool = True,
         prefill_chunk: Optional[int] = None,
         obs: Optional[Observability] = None,
+        fault_injector=None,
     ):
         # observability bundle FIRST: the counter attributes below are
         # RegistryCounterView descriptors whose backing cells live in
         # ``self.obs.metrics``, so it must exist before any ``= 0`` lands
         self.obs = obs or Observability()
+        #: optional seeded ``FaultInjector`` (DESIGN.md §9): consulted at
+        #: the ``engine/nan_logits`` point before each fused dispatch (and
+        #: handed to the page pool for ``pool/alloc_fail``); None = inert
+        self.fault_injector = fault_injector
+        if fault_injector is not None:
+            fault_injector.metrics = self.obs.metrics
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -251,6 +258,7 @@ class InferenceEngine:
                 max_slots * self.pages_per_slot + 1
             )
             self.pool = PagePool(num_pages, kv_page_size)
+            self.pool.fault_injector = fault_injector
             if enable_prefix_cache:
                 self.prefix_cache = RadixCache(self.pool)
             cache = T.init_paged_cache(
@@ -556,7 +564,12 @@ class InferenceEngine:
     def _top_up_pages(self, steps: int) -> None:
         """Extend every active slot's block table to cover the next
         ``steps`` token writes (converting admission reservations into
-        physical pages) — the fused loops then never need a host alloc."""
+        physical pages) — the fused loops then never need a host alloc.
+
+        A ``PageAllocError`` (injected transient allocator fault,
+        DESIGN.md §9) is contained per slot: the failing slot is evicted
+        and its request re-queued through the core's fault path; the
+        other slots keep decoding."""
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
@@ -564,7 +577,14 @@ class InferenceEngine:
             need = self.pool.pages_for(cover)
             cur = len(self._slot_pages[i])
             if need > cur:
-                got = self.pool.alloc(need - cur, reserved=True)
+                try:
+                    got = self.pool.alloc(need - cur, reserved=True)
+                except PageAllocError:
+                    self.obs.metrics.counter("fault/alloc_failures").inc()
+                    req = self.evict_slot(i, sync=False)
+                    if self._core is not None:
+                        self._core._on_slot_fault(i, req)
+                    continue
                 self._slot_reserved[i] -= len(got)
                 self._bt_host[i, cur: cur + len(got)] = got
                 self._slot_pages[i].extend(got)
@@ -683,7 +703,16 @@ class InferenceEngine:
             if shared_pages:
                 self.pool.decref(shared_pages)
             return None
-        new_pages = self.pool.alloc(prompt_pages - len(shared_pages))
+        try:
+            new_pages = self.pool.alloc(prompt_pages - len(shared_pages))
+        except PageAllocError:
+            # exhaustion or an injected allocator fault: unwind the
+            # prefix hold and report "no capacity" — admission blocks
+            # (the request stays queued) instead of crashing
+            self.obs.metrics.counter("fault/alloc_failures").inc()
+            if shared_pages:
+                self.pool.decref(shared_pages)
+            return None
         self.pool.reserve(total_pages - prompt_pages)
         row = shared_pages + new_pages
         self._slot_pages[slot] = list(row)
@@ -1059,6 +1088,81 @@ class InferenceEngine:
         return True
 
     # ------------------------------------------------------------------
+    # Fault injection + containment (DESIGN.md §9)
+    # ------------------------------------------------------------------
+    def _maybe_inject_nan(self) -> None:
+        """Consult the ``engine/nan_logits`` fault point before a fused
+        dispatch; on fire, poison one decodable slot's KV so the next
+        attention read produces NaN logits for exactly that slot.
+
+        The poison lands on the slot's LAST WRITTEN position — always
+        past the prompt's full pages (the victim must have generated at
+        least one token), so a radix-cached prefix is never poisoned and
+        prefix-sharing peers stay clean.  Attention families only: the
+        recurrent families carry no per-position KV to poison."""
+        inj = self.fault_injector
+        if inj is None or not inj.should_fire("engine/nan_logits"):
+            return
+        if not (isinstance(self.cache["layers"], dict)
+                and "k" in self.cache["layers"]):
+            return
+        cands = [
+            i for i, r in enumerate(self.slots)
+            if r is not None and not self.slot_prefilling(i)
+            and len(r.generated) > 0
+        ]
+        if not cands:
+            return
+        slot = cands[inj.choice("engine/nan_logits", len(cands))]
+        layers = self.cache["layers"]
+        if self.paged:
+            pos = self._slot_idx[slot] - 1
+            page = self._slot_pages[slot][pos // self.kv_page_size]
+            off = pos % self.kv_page_size
+            layers["k"] = layers["k"].at[0, page, off].set(jnp.nan)
+        else:
+            pos = int(jax.device_get(self.cache["index"])[slot]) - 1
+            layers["k"] = layers["k"].at[0, slot, pos].set(jnp.nan)
+
+    def _scrub_slot_kv(self, i: int) -> None:
+        """Zero the KV a quarantined slot wrote, BEFORE its pages/rows are
+        released.  Freeing poisoned KV un-scrubbed is not safe: a masked
+        attention position still contributes ``0 * NaN = NaN`` to the
+        weighted sum, so the stale-overwrite invariant only holds for
+        finite stale data.  Shared (radix-held) pages are left alone —
+        the poison never lands on them (see ``_maybe_inject_nan``), and
+        zeroing a shared prefix would corrupt its other holders."""
+        layers = self.cache["layers"]
+        if not (isinstance(layers, dict) and "k" in layers):
+            return
+        if self.paged:
+            private = [
+                p for p in self._slot_pages[i]
+                if self.pool.refcount[p] == 1
+            ]
+            if private:
+                idx = jnp.asarray(private, jnp.int32)
+                layers["k"] = layers["k"].at[:, idx].set(0)
+                layers["v"] = layers["v"].at[:, idx].set(0)
+        else:
+            layers["k"] = layers["k"].at[:, i].set(0)
+            layers["v"] = layers["v"].at[:, i].set(0)
+
+    def _quarantine_slot(self, i: int) -> Request:
+        """Containment for a NaN-screened slot: count it, scrub its KV,
+        evict it (pages freed, draft state reset), and hand the request
+        to the core's fault path (bounded-retry requeue).  The poisoned
+        dispatch's tokens were never absorbed, so a retry regenerates
+        them and the final stream stays byte-identical to a fault-free
+        run."""
+        self.obs.metrics.counter("fault/nan_quarantines").inc()
+        self._scrub_slot_kv(i)
+        req = self.evict_slot(i, sync=False)
+        if self._core is not None:
+            self._core._on_slot_fault(i, req)
+        return req
+
+    # ------------------------------------------------------------------
     def _drive_decode_loop(self, k: int) -> list[Request]:
         """Run ``k`` fused decode microsteps on-device; returns requests that
         finished.  One device->host transfer total, regardless of ``k``.
@@ -1076,16 +1180,19 @@ class InferenceEngine:
         if self.paged:
             # extend block tables to cover the loop's k writes per slot
             self._top_up_pages(k)
+            if self.num_active == 0:
+                return []  # every slot fell to an allocator fault
+        self._maybe_inject_nan()
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
             if r is not None and not self.slot_prefilling(i):
                 remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
-        tokens, cache, rem, toks_seq, steps = self._decode_loop(
+        tokens, cache, rem, toks_seq, steps, bad = self._decode_loop(
             self.params, self.tokens, self.cache, jnp.asarray(remaining), k=k
         )
         self.tokens, self.cache = tokens, cache
-        toks_np, steps_np, rem_np, idx_np = jax.device_get(
-            (toks_seq, steps, rem, cache["index"])
+        toks_np, steps_np, rem_np, idx_np, bad_np = jax.device_get(
+            (toks_seq, steps, rem, cache["index"], bad)
         )
         self.d2h_transfers += 1  # the single fused fetch above
         self.steps_executed += k
@@ -1093,6 +1200,14 @@ class InferenceEngine:
         finished = []
         for i, req in enumerate(self.slots):
             if req is None or self.slot_prefilling(i):
+                continue
+            if bad_np[i]:
+                # NaN screen (DESIGN.md §9): this slot's tokens from the
+                # loop are garbage — drop them all (the screen can't say
+                # which microstep went bad) and quarantine the slot; its
+                # on-device index/remaining are garbage too, so no retire
+                # check either
+                self._quarantine_slot(i)
                 continue
             n = int(steps_np[i])
             req.generated.extend(int(t) for t in toks_np[:n, i])
@@ -1126,20 +1241,26 @@ class InferenceEngine:
             # worst case every round accepts the whole chunk: cover
             # k * (gamma + 1) writes per slot
             self._top_up_pages(k * (gamma + 1))
+            if self.num_active == 0:
+                return []  # every slot fell to an allocator fault
+        self._maybe_inject_nan()
         remaining = np.zeros((self.max_slots,), np.int32)
         for i, r in enumerate(self.slots):
             if r is not None and not self.slot_prefilling(i):
                 remaining[i] = max(r.max_new_tokens - len(r.generated), 0)
         (
             self.tokens, self.cache, self.draft_cache, rem, self._spec_key,
-            out_toks, n_out, accepted, proposed,
+            out_toks, n_out, accepted, proposed, bad,
         ) = self._spec_loop(
             self.params, self.draft_params, self.tokens, self.cache,
             self.draft_cache, jnp.asarray(remaining), self._spec_key,
             k=k, gamma=gamma,
         )
-        toks_np, n_np, acc_np, prop_np, rem_np, idx_np = jax.device_get(
-            (out_toks, n_out, accepted, proposed, rem, self.cache["index"])
+        toks_np, n_np, acc_np, prop_np, rem_np, idx_np, bad_np = (
+            jax.device_get((
+                out_toks, n_out, accepted, proposed, rem,
+                self.cache["index"], bad,
+            ))
         )
         self.d2h_transfers += 1  # the single fused fetch above
         self.steps_executed += k
@@ -1148,6 +1269,12 @@ class InferenceEngine:
         finished = []
         for i, req in enumerate(self.slots):
             if req is None or self.slot_prefilling(i):
+                continue
+            if bad_np[i]:
+                # NaN screen (DESIGN.md §9): every round's acceptance for
+                # this slot is suspect — drop the whole loop's output and
+                # quarantine (no acceptance-EWMA pollution either)
+                self._quarantine_slot(i)
                 continue
             for j in range(k):
                 n = int(n_np[j, i])

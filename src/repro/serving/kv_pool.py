@@ -44,10 +44,19 @@ from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["PagePool", "RadixCache", "SENTINEL_PAGE"]
+__all__ = ["PageAllocError", "PagePool", "RadixCache", "SENTINEL_PAGE"]
 
 #: Physical page reserved as the write sink for empty/frozen slots.
 SENTINEL_PAGE = 0
+
+
+class PageAllocError(RuntimeError):
+    """Page allocation failed — genuine pool exhaustion, or an injected
+    transient allocator fault (``pool/alloc_fail``).  Recoverable by
+    contract: callers unwind their partial holds and either block
+    admission (capacity will return as slots retire) or quarantine the
+    affected slot (DESIGN.md §9).  Reservation-invariant violations stay
+    ``assert`` — those are bugs, not runtime conditions."""
 
 
 class PagePool:
@@ -62,6 +71,10 @@ class PagePool:
         # LIFO free list (pop from the end); sentinel page 0 excluded.
         self._free = list(range(num_pages - 1, 0, -1))
         self.reserved = 0
+        #: optional ``FaultInjector`` (DESIGN.md §9): when armed, the
+        #: ``pool/alloc_fail`` point makes ``alloc`` raise
+        #: ``PageAllocError`` as a transient allocator fault
+        self.fault_injector = None
 
     # -- capacity ------------------------------------------------------
     @property
@@ -105,17 +118,27 @@ class PagePool:
     def alloc(self, n: int, *, reserved: bool = False) -> list[int]:
         """Pop ``n`` free pages (refcount 1 each).  ``reserved=True``
         converts previously-reserved pages into allocated ones (the lazy
-        top-up path); otherwise the pages must fit in ``available``."""
+        top-up path); otherwise the pages must fit in ``available``.
+
+        Raises ``PageAllocError`` on exhaustion (not enough available
+        pages) or when an armed fault injector fires ``pool/alloc_fail``
+        — both are recoverable runtime conditions the caller must
+        contain, never crashes."""
         if n == 0:
             return []
+        inj = self.fault_injector
+        if inj is not None and inj.should_fire("pool/alloc_fail"):
+            raise PageAllocError(f"injected allocator fault (alloc({n}))")
         if reserved:
             assert n <= self.reserved, "top-up exceeds this pool's reservation"
             assert n <= len(self._free), "reservation invariant violated"
             self.reserved -= n
         else:
-            assert n <= self.available, (
-                f"alloc({n}) with only {self.available} available"
-            )
+            if n > self.available:
+                raise PageAllocError(
+                    f"pool exhausted: alloc({n}) with only "
+                    f"{self.available} available"
+                )
         pages = [self._free.pop() for _ in range(n)]
         self.refcount[pages] = 1
         return pages

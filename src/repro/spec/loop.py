@@ -48,7 +48,14 @@ def spec_round(
 ):
     """One propose/verify/accept round.  carry = (tokens, cache,
     draft_cache, remaining, key); emits (out_tokens [B, gamma+1],
-    n_out [B], accepted [B], proposed [B])."""
+    n_out [B], accepted [B], proposed [B], bad [B]).
+
+    ``bad`` is the per-slot NaN screen (DESIGN.md §9): True when the
+    target's verify logits for an *active* slot contain a non-finite
+    value — acceptance and emitted tokens for that slot are garbage and
+    the engine must quarantine it.  The draft's proposals need no screen
+    of their own: correctness flows from the verify pass alone, and a
+    poisoned draft only surfaces as (screened) verify logits."""
     tokens, cache, dcache, rem, key = carry
     key, k_draft, k_acc = jax.random.split(key, 3)
     idx0 = cache["index"]
@@ -66,6 +73,7 @@ def spec_round(
         cfg, params, chunk, cache, compute_dtype=compute_dtype,
         attn_impl=attn_impl,
     )
+    bad = active & ~jnp.isfinite(logits).all(axis=(-2, -1))
     if mode == "greedy":
         a, nxt, out, a_match = greedy_accept(d_toks, logits, rem)
     elif mode == "simulated":
@@ -106,7 +114,10 @@ def spec_round(
     # rejection, so it must not depress the gamma controller's EWMA
     accepted = jnp.where(active, a_match, 0)
     proposed = jnp.where(active, gamma, 0)
-    return (tokens, cache, dcache, rem, key), (out, n_out, accepted, proposed)
+    return (
+        (tokens, cache, dcache, rem, key),
+        (out, n_out, accepted, proposed, bad),
+    )
 
 
 def spec_decode_loop(
@@ -131,10 +142,13 @@ def spec_decode_loop(
     """Run ``k`` speculative rounds on-device.
 
     Returns ``(tokens, cache, draft_cache, remaining, key, out_tokens
-    [k, B, gamma+1], n_out [k, B], accepted [k, B], proposed [k, B])``;
-    round j emitted ``n_out[j, i]`` verified tokens ``out_tokens[j, i, :n]``
-    for slot i.  Callers bucket ``k`` (``DECODE_K_BUCKETS``) and ``gamma``
-    (``GAMMA_BUCKETS``) so the set of compiled programs stays bounded."""
+    [k, B, gamma+1], n_out [k, B], accepted [k, B], proposed [k, B],
+    bad [B])``; round j emitted ``n_out[j, i]`` verified tokens
+    ``out_tokens[j, i, :n]`` for slot i, and ``bad[i]`` flags slot i's
+    verify logits going non-finite in ANY round (the per-slot NaN screen
+    — DESIGN.md §9).  Callers bucket ``k`` (``DECODE_K_BUCKETS``) and
+    ``gamma`` (``GAMMA_BUCKETS``) so the set of compiled programs stays
+    bounded."""
 
     def body(carry, _):
         return spec_round(
@@ -147,8 +161,8 @@ def spec_decode_loop(
     (tokens, cache, draft_cache, remaining, key), ys = jax.lax.scan(
         body, carry, None, length=k
     )
-    out_tokens, n_out, accepted, proposed = ys
+    out_tokens, n_out, accepted, proposed, bad = ys
     return (
         tokens, cache, draft_cache, remaining, key,
-        out_tokens, n_out, accepted, proposed,
+        out_tokens, n_out, accepted, proposed, bad.any(axis=0),
     )
