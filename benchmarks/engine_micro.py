@@ -161,6 +161,191 @@ def bench_spec_decode(accept_p=0.9, gamma=4):
     return rows
 
 
+def bench_proposers(accept_p=0.9, gamma=4):
+    """Model-free proposal on prefix-heavy offline traffic (DESIGN.md §10):
+    prompt-lookup n-gram vs the draft-model path vs plain fused decode, on
+    the same target model.
+
+    Prefix-heavy prompts are the regime the host proposers exist for —
+    trailing n-grams recur, so candidate continuations come from the slot's
+    own history at ZERO model cost (no draft forwards at all); the target
+    only pays the one tree-verify pass per round.  Acceptance outcomes are
+    simulated (same rationale as ``bench_spec_decode``: the proposal
+    machinery, tree-verify kernel, rollback, and host accounting are the
+    real code paths; only the per-token accept decision is Bernoulli so a
+    random-init smoke model doesn't decide the measurement), plus one
+    real-greedy row reporting how often the n-gram table actually matches.
+    ``scripts/check_bench_regression.py`` gates the n-gram speedup."""
+    from repro.configs.base import SpecDecodeConfig, draft_config
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = 2048
+    prompt = np.tile([3, 5, 7, 9, 11], 8)  # prefix-heavy: period-5 tail
+    rows = []
+
+    def fresh(**kw):
+        eng = InferenceEngine(cfg, params, max_slots=4, max_seq=max_seq,
+                              kv_page_size=0, **kw)
+        for _ in range(4):
+            eng.add_request(Request(prompt=prompt, max_new_tokens=10**9))
+        return eng
+
+    def throughput(engine, call, n=20, warmup=3):
+        for _ in range(warmup):
+            call()
+        g0 = engine.generated_tokens_total
+        t0 = time.perf_counter()
+        for _ in range(n):
+            call()
+        dt = time.perf_counter() - t0
+        assert engine.num_active == 4, "slots retired mid-benchmark"
+        return (engine.generated_tokens_total - g0) / dt
+
+    plain = fresh()
+    plain_tps = throughput(plain, lambda: plain.decode_loop(8))
+
+    sim = SpecDecodeConfig(mode="simulated", sim_accept_p=accept_p,
+                           proposer="ngram")
+    ngram = fresh(spec=sim)
+    ngram_tps = throughput(
+        ngram, lambda: ngram._drive_proposed_loop(4, gamma, "ngram")
+    )
+
+    dspec = SpecDecodeConfig(mode="simulated", sim_accept_p=accept_p,
+                             proposer="draft")
+    dcfg = draft_config(cfg, dspec)
+    draft = fresh(spec=dspec, draft_cfg=dcfg,
+                  draft_params=T.init_params(dcfg, jax.random.PRNGKey(1)))
+    draft_tps = throughput(
+        draft, lambda: draft._drive_proposed_loop(4, gamma, "draft")
+    )
+
+    rows.append(("micro", "proposer:plain_tokens_per_s(decode_loop k=8)",
+                 "fused", "tok_per_s", round(plain_tps, 1)))
+    rows.append(("micro", "proposer:ngram_tokens_per_s(sim p=%g gamma=%d)"
+                 % (accept_p, gamma), "ngram", "tok_per_s",
+                 round(ngram_tps, 1)))
+    rows.append(("micro", "proposer:draft_tokens_per_s(sim p=%g gamma=%d)"
+                 % (accept_p, gamma), "draft", "tok_per_s",
+                 round(draft_tps, 1)))
+    rows.append(("micro", "proposer:ngram_speedup_vs_plain", "ngram",
+                 "ratio", round(ngram_tps / plain_tps, 3)))
+    rows.append(("micro", "proposer:draft_speedup_vs_plain", "draft",
+                 "ratio", round(draft_tps / plain_tps, 3)))
+
+    # real greedy acceptance (no simulation): how often does prompt-lookup
+    # find a candidate at all on prefix-heavy traffic, and how much of what
+    # it proposes does the target keep?
+    real = fresh(spec=SpecDecodeConfig(proposer="ngram"))
+    for _ in range(12):
+        real._drive_proposed_loop(1, gamma, "ngram")
+    m = real.obs.metrics
+    matched = m.counter("spec/proposer/rounds/ngram").value
+    fallbacks = m.counter("spec/proposer/no_match_fallbacks").value
+    rows.append(("micro", "proposer:ngram_match_coverage(greedy)", "ngram",
+                 "fraction",
+                 round(matched / max(matched + fallbacks, 1), 3)))
+    rows.append(("micro", "proposer:ngram_acceptance(greedy)", "ngram",
+                 "fraction",
+                 round(m.gauge("spec/proposer/acceptance/ngram").value, 3)))
+    return rows
+
+
+def bench_tree_verify(width=2, depth=4):
+    """Tree verification vs sequential linear verification at equal
+    candidate coverage (DESIGN.md §10): scoring ``width`` candidate chains
+    of ``depth`` tokens takes ONE tree-verify pass (ancestor-mask kernel,
+    width*depth+1 packed nodes) where chain verification needs ``width``
+    sequential passes — and each pass is a device round-trip on the host
+    proposal path.
+
+    Also checks the equal-accepted-tokens invariant that makes the
+    comparison meaningful: a tree whose branch 0 is the target's own greedy
+    chain accepts exactly what the linear verify of that chain accepts
+    (byte-identical output; ``tests/test_tree_verify.py`` proves the
+    general property)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import SpecDecodeConfig
+    from repro.spec.tree import branching_tree, linear_chain
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.tile([3, 5, 7, 9, 11], 4)
+    spec = SpecDecodeConfig(proposer="ngram")
+    rows = []
+
+    def fresh():
+        eng = InferenceEngine(cfg, params, max_slots=4, max_seq=2048,
+                              kv_page_size=0, spec=spec)
+        for _ in range(4):
+            eng.add_request(Request(prompt=prompt, max_new_tokens=10**9))
+        return eng
+
+    # the target's own greedy continuation: the fully-accepted candidate.
+    # generated[0] came from prefill (it is the fresh engines' CURRENT
+    # token — tree node 0), so the proposals start at generated[1]
+    ref = fresh()
+    ref.decode_loop(depth + 1)
+    chains = np.array(
+        [r.generated[1:] for r in ref.slots], np.int32
+    )
+
+    lin_parents = linear_chain(depth)
+    tree_parents = branching_tree(width, depth)
+
+    def round_fn(eng, parents, tail):
+        fn = eng._tree_round_fn(parents, "greedy")
+
+        def call():
+            out = fn(eng.params, eng.tokens, eng.cache, jnp.asarray(tail),
+                     jnp.asarray(np.full(4, 1 << 20, np.int32)),
+                     eng._spec_key)
+            (eng.tokens, eng.cache, _rem, eng._spec_key) = out[:4]
+            return jax.device_get(out[4:])
+
+        return call
+
+    # equal-accepted-tokens check: branch 0 = greedy chain -> the tree
+    # round and the linear round absorb the SAME depth+1 tokens
+    lin_tail = chains[:, :depth]
+    tree_tail = np.concatenate(
+        [lin_tail] + [np.full_like(lin_tail, 2)] * (width - 1), axis=1
+    )
+    e_lin, e_tree = fresh(), fresh()
+    toks_l, n_l = round_fn(e_lin, lin_parents, lin_tail)()[:2]
+    toks_t, n_t = round_fn(e_tree, tree_parents, tree_tail)()[:2]
+    equal = bool(
+        np.array_equal(n_l, n_t)
+        and all(
+            np.array_equal(toks_l[i, : n_l[i]], toks_t[i, : n_t[i]])
+            for i in range(4)
+        )
+        and np.array_equal(toks_l[0, : n_l[0]], chains[0, : int(n_l[0])])
+    )
+    rows.append(("micro", "tree:accepted_equals_linear(width=%d)" % width,
+                 "tree", "bool", int(equal)))
+
+    # cost at equal candidate coverage: 1 tree pass vs width linear passes
+    e_lin, e_tree = fresh(), fresh()
+    lin_call = round_fn(e_lin, lin_parents, lin_tail)
+    tree_call = round_fn(e_tree, tree_parents, tree_tail)
+    lin_us = _time_us(lambda: [lin_call() for _ in range(width)], n=25)
+    tree_us = _time_us(tree_call, n=25)
+    rows.append(("micro", "tree:verify_passes_for_%d_chains" % width,
+                 "tree", "count", 1))
+    rows.append(("micro", "tree:verify_passes_for_%d_chains" % width,
+                 "linear", "count", width))
+    rows.append(("micro", "tree:us_per_round(%d chains depth=%d)"
+                 % (width, depth), "tree", "us", round(tree_us, 1)))
+    rows.append(("micro", "tree:us_per_round(%d chains depth=%d)"
+                 % (width, depth), "linear", "us", round(lin_us, 1)))
+    rows.append(("micro", "tree:speedup_at_equal_candidates", "tree",
+                 "ratio", round(lin_us / tree_us, 3)))
+    return rows
+
+
 def bench_paged_kv():
     """Paged KV pool vs the dense per-slot layout (DESIGN.md §5): decode
     throughput at equal batch, HBM per slot, concurrent slots at equal cache
@@ -786,6 +971,8 @@ def all_rows():
         bench_engine_microstep()
         + bench_prefill_buckets()
         + bench_spec_decode()
+        + bench_proposers()
+        + bench_tree_verify()
         + bench_paged_kv()
         + bench_engine_core()
         + bench_chunked_prefill()

@@ -208,6 +208,50 @@ def main() -> int:
         print("FAIL: the early-resume workload injected no resumes — "
               "the revocation-throughput gate has gone stale")
         return 1
+
+    # --- proposer + tree-verify gates (DESIGN.md §10) ------------------
+    # bench_proposers measures the host n-gram proposer on prefix-heavy
+    # offline traffic (simulated acceptance, same rationale as the spec
+    # rows); bench_tree_verify compares one ancestor-mask tree pass against
+    # sequential linear verification at equal candidate coverage.  The
+    # spec:speedup_vs_plain row doubles as a staleness canary: if the
+    # draft/verify machinery the proposers build on stops beating plain
+    # decode, the proposer rows above it are measuring a dead subsystem.
+    ngram_speedup = vals.get("proposer:ngram_speedup_vs_plain")
+    coverage = vals.get("proposer:ngram_match_coverage(greedy)")
+    tree_equal = vals.get("tree:accepted_equals_linear(width=2)")
+    tree_speedup = vals.get("tree:speedup_at_equal_candidates")
+    spec_speedup = vals.get("spec:speedup_vs_plain")
+    if None in (ngram_speedup, coverage, tree_equal, tree_speedup,
+                spec_speedup):
+        print(f"check_bench_regression: proposer/tree rows missing from "
+              f"{path}")
+        return 1
+    print(f"proposers: ngram {ngram_speedup}x vs plain (match coverage "
+          f"{coverage}); tree verify {tree_speedup}x vs linear at equal "
+          f"candidates (accepted-equal={tree_equal}); spec canary "
+          f"{spec_speedup}x")
+    if ngram_speedup < 1.3:
+        print("FAIL: the n-gram proposer fell below 1.3x plain decode on "
+              "prefix-heavy offline traffic")
+        return 1
+    if coverage <= 0:
+        print("FAIL: prompt-lookup never matched on prefix-heavy traffic — "
+              "the proposer workload has gone stale")
+        return 1
+    if tree_equal != 1:
+        print("FAIL: the tree-verify round diverged from linear "
+              "verification on the fully-accepted candidate")
+        return 1
+    if tree_speedup <= 1.0:
+        print("FAIL: one tree pass is no cheaper than sequential linear "
+              "passes at equal candidate coverage")
+        return 1
+    if spec_speedup <= 1.0:
+        print("FAIL: the spec loop no longer beats plain decode — the "
+              "proposer comparisons above are against a dead baseline "
+              "(staleness canary)")
+        return 1
     print("OK")
     return 0
 

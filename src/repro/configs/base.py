@@ -345,6 +345,22 @@ class SpecDecodeConfig:
     draft_cost_ratio: float = 0.25  # draft step cost / target step cost
     accept_ewma: float = 0.5  # acceptance-rate smoothing (gamma controller)
 
+    # --- pluggable proposers (spec.proposers, DESIGN.md §10) ---
+    #: Candidate source: "auto" routes per quantum via the acceptance-EWMA
+    #: router — on a draft-paired engine it registers BOTH the draft model
+    #: and prompt-lookup n-gram and picks per quantum; on a plain engine it
+    #: registers nothing (speculation stays opt-in: an engine without a
+    #: draft pairing behaves exactly as before).  "draft"/"ngram" pin one
+    #: proposer ("ngram" enables host-only speculation on a plain engine);
+    #: "none" disables routing entirely (draft pairing alone decides).
+    #: Host proposers are attention-family only — recurrent families always
+    #: use the draft-model chain path.
+    proposer: str = "auto"
+    ngram_order: int = 3  # trailing n-gram matched by the lookup proposer
+    tree_width: int = 1  # candidate branches per host-proposed round
+    router_ewma: float = 0.5  # router acceptance smoothing
+    router_init_acceptance: float = 0.7  # optimistic seed (try-everything)
+
 
 def draft_config(target: ModelConfig, spec: SpecDecodeConfig = SpecDecodeConfig()) -> ModelConfig:
     """Derive a cheap draft model from ``target``: same family, vocabulary,

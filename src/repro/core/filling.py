@@ -179,7 +179,9 @@ class SpecInFPolicy(SchedulerPolicy):
         self.prefill_token_cost_steps = prefill_token_cost_steps
 
     def _spec(self, core) -> bool:
-        return core.engine.spec_enabled and self.gamma_ctrl is not None
+        return (
+            core.engine.spec_enabled or core.engine.host_spec_enabled
+        ) and self.gamma_ctrl is not None
 
     def min_offline_grant(self, core, phase) -> float:
         """Smallest grant that pays for one whole offline quantum."""
@@ -236,7 +238,16 @@ class SpecInFPolicy(SchedulerPolicy):
         if self._spec(core):
             g = self.gamma_ctrl.gamma_for(grant.phase)
             exp = self.gamma_ctrl.expected_tokens_per_round(g)
-            rc = self.gamma_ctrl.round_cost_steps(g)
+            # grant-aware routing (DESIGN.md §10): model-free host rounds
+            # spend ~1 bubble step where a draft round spends
+            # 1 + (gamma+1)*cost_ratio — Algorithm-1 grants are priced by
+            # what will actually run
+            plan.proposer = core.engine.route_proposer(g)
+            rc = (
+                core.engine.proposer_round_cost(plan.proposer, g)
+                if plan.proposer is not None
+                else self.gamma_ctrl.round_cost_steps(g)
+            )
             afford = max(int(want_tokens / max(exp, 1e-9)), 1)
             left = max(int(grant.max_cost_steps / rc), 1)
             plan.k = largest_bucket(min(afford, left))
@@ -305,7 +316,7 @@ class SpecInFRuntime:
         if (
             self.gamma_ctrl is None
             and engine is not None
-            and engine.spec_enabled
+            and (engine.spec_enabled or engine.host_spec_enabled)
         ):
             sc = engine.spec_cfg
             self.gamma_ctrl = AdaptiveGammaController(

@@ -163,6 +163,74 @@ def verify_attention(
     raise ValueError(f"unknown verify attention impl {impl!r}")
 
 
+def tree_verify_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    anc: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Tree-verify attention over a ragged KV cache (multi-candidate
+    speculative decoding).
+
+    q: [B, N, H, hd] — one query per packed-tree node, the node's K/V
+    already written at position ``lengths - N + node``; k/v_cache:
+    [B, S_max, kvH, hd]; lengths: [B] int32 valid-KV counts *including*
+    the N tree positions; anc: [B, N] int32 ancestor bitmasks (bit i of
+    anc[b, j] = node i visible from node j; self bit set).  Node j attends
+    the committed prefix ``kpos < lengths - N`` plus the intra-chunk
+    positions its bitmask admits.  A linear-chain anc reproduces
+    ``verify_attention`` exactly.  Returns [B, N, H, hd].
+
+    ``impl``:
+      * "auto"   -- pallas on TPU, xla elsewhere
+      * "xla"    -- ancestor-masked dense attention over S_max
+      * "pallas" -- tree-verify kernel (interpret=True automatically off-TPU)
+    """
+    from repro.models import layers as L
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        b, t, h, hd = q.shape
+        s_max = k_cache.shape[1]
+        kk = L._repeat_kv(k_cache.astype(q.dtype), h)
+        vv = L._repeat_kv(v_cache.astype(q.dtype), h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+        scores = scores * hd**-0.5
+        kpos = jnp.arange(s_max)[None, :]  # [1, S]
+        base = (lengths - t)[:, None]  # [B, 1]
+        prefix = kpos < base  # [B, S]
+        jpos = kpos - base  # [B, S] intra-chunk node index of each key
+        in_chunk = (jpos >= 0) & (jpos < t)
+        bits = (anc.astype(jnp.int32)[:, :, None]
+                >> jnp.clip(jpos, 0, 31)[:, None, :]) & 1  # [B, N, S]
+        mask = prefix[:, None, :] | (in_chunk[:, None, :] & (bits == 1))
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        # rows with an empty visibility set (empty slots, lengths < N) are
+        # uniform softmax garbage; zero them to match the kernel
+        any_vis = mask.any(axis=-1)  # [B, N]
+        return jnp.where(any_vis[:, :, None, None], out, 0.0)
+    if impl == "pallas":
+        from repro.kernels.tree_verify_attention import (
+            tree_verify_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            lengths,
+            anc,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown tree verify attention impl {impl!r}")
+
+
 def prefill_chunk_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -331,6 +399,55 @@ def paged_verify_attention(
             interpret=not _on_tpu(),
         )
     raise ValueError(f"unknown paged verify attention impl {impl!r}")
+
+
+def paged_tree_verify_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    anc: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Tree-verify attention over the paged KV pool (multi-candidate
+    speculative decoding).
+
+    q: [B, N, H, hd] — one query per packed-tree node, whose K/V has
+    already been scattered into the slot's pages at logical position
+    ``lengths - N + node``; k/v_pool: [P, page, kvH, hd]; block_tables:
+    [B, W] int32; lengths: [B] int32 *including* the N tree positions;
+    anc: [B, N] int32 ancestor bitmasks.  Returns [B, N, H, hd].
+
+    ``impl``: same semantics as ``paged_decode_attention``.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return tree_verify_attention(
+            q,
+            _gather_pages(k_pool, block_tables),
+            _gather_pages(v_pool, block_tables),
+            lengths,
+            anc,
+            impl="xla",
+        )
+    if impl == "pallas":
+        from repro.kernels.paged_tree_verify_attention import (
+            paged_tree_verify_attention as _kernel,
+        )
+
+        return _kernel(
+            q,
+            k_pool.astype(q.dtype),
+            v_pool.astype(q.dtype),
+            block_tables,
+            lengths,
+            anc,
+            interpret=not _on_tpu(),
+        )
+    raise ValueError(f"unknown paged tree verify attention impl {impl!r}")
 
 
 def paged_prefill_chunk_attention(

@@ -1,0 +1,190 @@
+"""Tree-verify Pallas TPU kernel: multi-candidate speculative verification.
+
+``verify_attention`` scores one *linear* draft chain per slot: chunk query t
+attends the prefix plus intra-chunk positions ``<= t`` (a causal triangle).
+This kernel generalizes that intra-chunk triangle to an ANCESTOR MASK so a
+packed candidate *tree* — k branches sharing a root — verifies in ONE pass.
+Node j of the tree occupies chunk position j (its K/V is written at cache
+position ``lengths - N + j``, exactly where a linear chunk would put it);
+``anc[b, j]`` is an int32 bitmask whose bit i is set iff node i is an
+ancestor of node j *or j itself* (nodes are numbered so parents precede
+children, hence ``N <= 31`` nodes fit one int32).  Query row j then attends
+
+    kpos <  lengths - N          (the committed prefix), or
+    kpos >= lengths - N  with bit ``kpos - (lengths - N)`` set in anc[b, j]
+
+A linear chain (``anc[j]`` = bits 0..j) reproduces the triangle bound
+``kpos <= lengths - N + j`` bit for bit, so this kernel is a strict
+generalization of ``verify_attention`` (the equivalence a property test
+pins down).
+
+Layout mirrors ``verify_attention`` exactly: q [B, N, H, hd] (one query per
+tree node), k/v [B, S_max, kvH, hd], lengths [B] int32 INCLUDING the N tree
+positions, anc [B, N] int32 riding in as a second scalar-prefetch operand
+next to lengths.  Grid (B, kvH, num_kv_blocks); query rows fold to a
+``N * gp`` sublane axis; the DMA-clamp index_map and the fully-masked-row
+guard are reused verbatim.  The per-row bitmask test is an unrolled Python
+loop over the N chunk rows reading one SMEM scalar each — no gathers inside
+the kernel body.  ``interpret=True`` runs the same body on CPU for CI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+#: Hard cap on packed-tree size: ancestor sets are int32 bitmasks.
+MAX_TREE_NODES = 31
+
+
+def _tree_verify_kernel(
+    lengths_ref,  # scalar prefetch: [B] int32
+    anc_ref,  # scalar prefetch: [B, N] int32 ancestor bitmasks
+    q_ref,  # [1, 1, N * gp, hd]
+    k_ref, v_ref,  # [1, bk, 1, hd]
+    o_ref,  # [1, 1, N * gp, hd]
+    acc_ref, m_ref, l_ref,  # VMEM scratch: [N*gp, hd], [N*gp, 1], [N*gp, 1]
+    *,
+    block_k: int,
+    chunk: int,  # N = tree nodes
+    gp: int,  # sublane-padded GQA group size
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = lengths_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [N*gp, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)  # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [N*gp, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        t_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gp
+        # Intra-chunk node index of each key position (negative = prefix,
+        # >= chunk = beyond the tree).  Shifts are clamped into [0, 31] so
+        # out-of-range lanes stay defined; ``in_chunk`` gates them off.
+        jpos = kpos - (length - chunk)
+        jc = jnp.clip(jpos, 0, 31)
+        in_chunk = (jpos >= 0) & (jpos < chunk)
+        # Row r holds tree node t = r // gp.  Visibility of key node j from
+        # query node t is bit j of anc[b, t]; each of the N rows reads its
+        # one SMEM scalar in an unrolled loop (no in-kernel gathers).
+        intra = jnp.zeros(s.shape, jnp.bool_)
+        for t in range(chunk):
+            bit = ((anc_ref[b, t] >> jc) & 1) == 1
+            intra = jnp.where(t_row == t, bit, intra)
+        s = jnp.where((kpos < length - chunk) | (in_chunk & intra), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # Fully-masked rows (empty slots, lengths < N) must finalize to
+        # zeros: mask the exp so l stays 0 (same guard as verify_attention).
+        p = jnp.where(s > NEG_INF, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tree_verify_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    anc: jax.Array,
+    *,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, N, H, hd] one query per packed-tree node; k/v: [B, S_max, kvH,
+    hd] with node j's K/V already written at position ``lengths - N + j``;
+    lengths: [B] int32 valid-KV counts *including* the N tree positions;
+    anc: [B, N] int32 ancestor bitmasks (bit i of anc[b, j] = node i visible
+    from node j; self bit set).  Returns [B, N, H, hd].  Slots with
+    ``lengths == 0`` — and rows whose visibility set is empty — return
+    zeros."""
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    assert t <= MAX_TREE_NODES, f"tree has {t} nodes (> {MAX_TREE_NODES})"
+    assert h % kvh == 0, f"q heads {h} not a multiple of kv heads {kvh}"
+    group = h // kvh
+    gp = max(8, group)  # sublane-pad the tiny GQA-group axis
+    block_k = min(block_k, s)
+    nk = (s + block_k - 1) // block_k
+    pad_s = nk * block_k - s
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    qr = q.reshape(b, t, kvh, group, hd)
+    if gp != group:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, 0), (0, gp - group), (0, 0)))
+    qr = qr.transpose(0, 2, 1, 3, 4).reshape(b, kvh, t * gp, hd)
+    lengths = jnp.minimum(lengths.astype(jnp.int32), s)
+    anc = anc.astype(jnp.int32)
+
+    def q_map(bi, hi, ki, lens, ancs):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, lens, ancs):
+        last = jnp.maximum(pl.cdiv(lens[bi], block_k) - 1, 0)
+        return (bi, jnp.minimum(ki, last), hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, t * gp, hd), q_map),
+            pl.BlockSpec((1, block_k, 1, hd), kv_map),
+            pl.BlockSpec((1, block_k, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t * gp, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((t * gp, hd), jnp.float32),
+            pltpu.VMEM((t * gp, 1), jnp.float32),
+            pltpu.VMEM((t * gp, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _tree_verify_kernel, block_k=block_k, chunk=t, gp=gp,
+        sm_scale=hd**-0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, t * gp, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(lengths, anc, qr, k, v)
+    out = out.reshape(b, kvh, t, gp, hd)[:, :, :, :group]
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, t, h, hd)

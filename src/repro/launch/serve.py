@@ -72,6 +72,23 @@ def summarize(engine: InferenceEngine) -> list:
                 f"p95={h.percentile(95)*1e3:.1f}ms "
                 f"max={h.max*1e3:.1f}ms"
             )
+    # one row per proposer that actually ran (DESIGN.md §10)
+    for prop in ("draft", "ngram", "suffix"):
+        rounds = m.counter(f"spec/proposer/rounds/{prop}").value
+        if rounds:
+            lines.append(
+                f"[serve] proposer {prop}: rounds={rounds} "
+                f"proposed={m.counter(f'spec/proposer/proposed/{prop}').value} "
+                f"accepted={m.counter(f'spec/proposer/accepted/{prop}').value} "
+                f"acceptance={m.gauge(f'spec/proposer/acceptance/{prop}').value:.3f}"
+            )
+    switches = m.counter("spec/proposer/router_switches").value
+    fallbacks = m.counter("spec/proposer/no_match_fallbacks").value
+    if switches or fallbacks:
+        lines.append(
+            f"[serve] proposer routing: switches={switches} "
+            f"no_match_fallbacks={fallbacks}"
+        )
     return lines
 
 
@@ -94,15 +111,35 @@ def main() -> None:
         "--trace", metavar="PREFIX", default=None,
         help="write the step trace to PREFIX.jsonl + PREFIX.chrome.json",
     )
+    ap.add_argument(
+        "--proposer", choices=("auto", "draft", "ngram", "none"),
+        default="none",
+        help="speculation source: 'ngram' is host-only (no draft model); "
+        "'draft'/'auto' additionally build a draft pairing; 'auto' routes "
+        "between them per quantum (DESIGN.md §10)",
+    )
     args = ap.parse_args()
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    spec_kw = {}
+    if args.proposer != "none":
+        from repro.configs.base import SpecDecodeConfig, draft_config
+
+        spec = SpecDecodeConfig(proposer=args.proposer)
+        spec_kw["spec"] = spec
+        if args.proposer in ("auto", "draft"):
+            dcfg = draft_config(cfg, spec)
+            spec_kw["draft_cfg"] = dcfg
+            spec_kw["draft_params"] = T.init_params(
+                dcfg, jax.random.PRNGKey(args.seed + 1)
+            )
     t0 = time.monotonic()
     # single clock source: engine timestamps share the arrival timebase
     engine = InferenceEngine(cfg, params, max_slots=args.slots,
                              max_seq=args.max_seq,
-                             clock=lambda: time.monotonic() - t0)
+                             clock=lambda: time.monotonic() - t0,
+                             **spec_kw)
     engine.obs.tracer.enabled = args.trace is not None
     core = engine.core
 

@@ -310,6 +310,8 @@ def attention_verify(
     cache_index: jax.Array,
     *,
     impl: str = "auto",
+    anc: Optional[jax.Array] = None,
+    depths: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Chunk-verify decode: score T = gamma+1 chunk tokens in one pass.
 
@@ -321,10 +323,20 @@ def attention_verify(
     Rollback after acceptance only rewinds ``index`` — rejected positions'
     K/V entries sit beyond the rewound index and are rewritten before ever
     being attended to (the same stale-overwrite invariant bucket-padded
-    prefill relies on, DESIGN.md §3/§4)."""
+    prefill relies on, DESIGN.md §3/§4).
+
+    Tree mode (``anc`` + ``depths`` given): x holds one embedding per
+    packed-tree node; ``anc`` [B, T] int32 ancestor bitmasks select the
+    intra-chunk visibility (``ops.tree_verify_attention``); ``depths`` [T]
+    int32 per-node tree depth replaces ``arange(T)`` as the RoPE offset so
+    sibling branches rotate at the same sequence position.  K/V still
+    writes at node-index positions — the slot each bitmask bit refers to.
+    A linear chain (depths == arange, anc == cumulative bits) is
+    bit-identical to the default path."""
     b, t, _ = x.shape
     idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
-    positions = idx[:, None] + jnp.arange(t)[None, :]  # [B, T]
+    offs = jnp.arange(t) if depths is None else depths.astype(jnp.int32)
+    positions = idx[:, None] + offs[None, :]  # [B, T] RoPE positions
     q, k_new, v_new = _project_qkv(cfg, p, x, positions)
     k_cache, v_cache = kv_cache
     upd = jax.vmap(
@@ -334,9 +346,13 @@ def attention_verify(
     v_cache = upd(v_cache, v_new.astype(v_cache.dtype), idx)
     from repro.kernels import ops  # local import to avoid cycles
 
-    out = shard(
-        ops.verify_attention(q, k_cache, v_cache, idx + t, impl=impl), "bthd"
-    )
+    if anc is None:
+        core = ops.verify_attention(q, k_cache, v_cache, idx + t, impl=impl)
+    else:
+        core = ops.tree_verify_attention(
+            q, k_cache, v_cache, idx + t, anc, impl=impl
+        )
+    out = shard(core, "bthd")
     mask = head_mask(cfg, out.dtype)
     if mask is not None:
         out = out * mask[None, None, :, None]
@@ -466,6 +482,8 @@ def attention_verify_paged(
     cache_index: jax.Array,
     *,
     impl: str = "auto",
+    anc: Optional[jax.Array] = None,
+    depths: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Chunk-verify decode against the paged KV pool: T tokens in one pass.
 
@@ -475,22 +493,34 @@ def attention_verify_paged(
     after acceptance only rewinds ``index``: rejected positions sit past the
     rewound index inside the slot's *private* pages and are rewritten before
     ever being attended to — the dense path's stale-overwrite invariant,
-    unchanged by paging (DESIGN.md §5)."""
+    unchanged by paging (DESIGN.md §5).
+
+    Tree mode (``anc`` + ``depths``): same contract as
+    ``attention_verify`` — ancestor-bitmask intra-chunk visibility
+    (``ops.paged_tree_verify_attention``), depth-based RoPE offsets,
+    node-index K/V scatter."""
     b, t, _ = x.shape
     idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
-    positions = idx[:, None] + jnp.arange(t)[None, :]  # [B, T]
+    pos_w = idx[:, None] + jnp.arange(t)[None, :]  # [B, T] write slots
+    if depths is None:
+        positions = pos_w
+    else:
+        positions = idx[:, None] + depths.astype(jnp.int32)[None, :]
     q, k_new, v_new = _project_qkv(cfg, p, x, positions)
     k_pool, v_pool = kv_pool
-    k_pool = paged_kv_write(k_pool, k_new, block_tables, positions)
-    v_pool = paged_kv_write(v_pool, v_new, block_tables, positions)
+    k_pool = paged_kv_write(k_pool, k_new, block_tables, pos_w)
+    v_pool = paged_kv_write(v_pool, v_new, block_tables, pos_w)
     from repro.kernels import ops  # local import to avoid cycles
 
-    out = shard(
-        ops.paged_verify_attention(
+    if anc is None:
+        core = ops.paged_verify_attention(
             q, k_pool, v_pool, block_tables, idx + t, impl=impl
-        ),
-        "bthd",
-    )
+        )
+    else:
+        core = ops.paged_tree_verify_attention(
+            q, k_pool, v_pool, block_tables, idx + t, anc, impl=impl
+        )
+    out = shard(core, "bthd")
     mask = head_mask(cfg, out.dtype)
     if mask is not None:
         out = out * mask[None, None, :, None]

@@ -457,12 +457,21 @@ def decode_chunk(
     compute_dtype=jnp.bfloat16,
     attn_impl: str = "auto",
     logits_at: Optional[jax.Array] = None,
+    anc: Optional[jax.Array] = None,
+    depths: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Params, Optional[Params]]:
     """Score a T = gamma+1 speculative chunk in ONE fused pass.
 
     tokens: [B, T] int32 — current token + gamma draft tokens per slot.
     Returns ``(logits [B, T, V], cache, chunk_states)`` with the cache index
-    advanced by T and the chunk's K/V (or SSM state) consumed.
+    advanced by T and the cache's K/V (or SSM state) consumed.
+
+    Tree mode (attention families only): ``anc`` [B, T] int32 ancestor
+    bitmasks + ``depths`` [T] int32 per-node depths switch the attention
+    core to ``tree_verify_attention`` — tokens then hold one packed-tree
+    node each (node 0 = root = the current token) and every layer applies
+    the same ancestor visibility and depth-based RoPE.  ``None`` (default)
+    is bit-identical to the linear-chunk path.
 
     ``logits_at`` ([] int32, traced) restricts the unembedding to one chunk
     position — logits come back [B, 1, V].  Chunk-based suffix prefill
@@ -480,6 +489,10 @@ def decode_chunk(
     (``spec.rollback.select_step_state``).  Pure-KV families return ``None``
     there — rewinding ``index`` alone is a complete rollback for them."""
     b, t = tokens.shape
+    if anc is not None and cfg.family not in ("dense", "moe", "audio", "vlm"):
+        raise ValueError(
+            f"tree verification needs an attention family, got {cfg.family!r}"
+        )
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         x = params["embed"].astype(compute_dtype)[tokens]  # [B, T, d]
         idx = cache["index"]
@@ -493,11 +506,13 @@ def decode_chunk(
             h = L.norm(cfg, xc, lp.get("ln1"))
             if bt is not None:
                 y, (k_c, v_c) = L.attention_verify_paged(
-                    cfg, lp["attn"], h, (k_c, v_c), bt, idx, impl=attn_impl
+                    cfg, lp["attn"], h, (k_c, v_c), bt, idx, impl=attn_impl,
+                    anc=anc, depths=depths,
                 )
             else:
                 y, (k_c, v_c) = L.attention_verify(
-                    cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl
+                    cfg, lp["attn"], h, (k_c, v_c), idx, impl=attn_impl,
+                    anc=anc, depths=depths,
                 )
             xc = xc + y
             h = L.norm(cfg, xc, lp.get("ln2"))

@@ -57,6 +57,22 @@ STABLE_NAMES = {
     "engine/spec_rounds": "counter",
     "engine/spec_drafted": "counter",
     "engine/spec_accepted": "counter",
+    # pluggable speculation proposers (DESIGN.md §10)
+    "spec/proposer/rounds/draft": "counter",
+    "spec/proposer/rounds/ngram": "counter",
+    "spec/proposer/rounds/suffix": "counter",
+    "spec/proposer/proposed/draft": "counter",
+    "spec/proposer/proposed/ngram": "counter",
+    "spec/proposer/proposed/suffix": "counter",
+    "spec/proposer/accepted/draft": "counter",
+    "spec/proposer/accepted/ngram": "counter",
+    "spec/proposer/accepted/suffix": "counter",
+    "spec/proposer/acceptance/draft": "gauge",
+    "spec/proposer/acceptance/ngram": "gauge",
+    "spec/proposer/acceptance/suffix": "gauge",
+    "spec/proposer/tree_nodes": "gauge",
+    "spec/proposer/router_switches": "counter",
+    "spec/proposer/no_match_fallbacks": "counter",
     # request-lifecycle counters (EngineCore)
     "core/preemptions": "counter",
     "core/finish_reason/stop": "counter",

@@ -244,6 +244,11 @@ class StepPlan:
     preempt_to_admit: bool = False  # may admission evict OFFLINE victims?
     k: int = 0
     gamma: Optional[int] = None  # None -> plain decode loop
+    #: routed candidate source for the speculative quantum (DESIGN.md §10):
+    #: None keeps the historical draft-pairing dispatch; a name drives the
+    #: engine's ``_drive_proposed_loop`` (the draft model delegates back to
+    #: the fused loop, host proposers run tree-verify rounds)
+    proposer: Optional[str] = None
     cost_steps: float = 0.0  # DECODE cost in microstep-equivalents
     #: prefill-token budget for this quantum (chunked engines stream up to
     #: this many metered prompt tokens; inf = drain all pending, the
@@ -276,6 +281,9 @@ class StepOutputs:
     preempted: list = dataclasses.field(default_factory=list)  # request ids
     k: int = 0
     gamma: Optional[int] = None
+    #: the candidate source the speculative quantum ran with (None for
+    #: plain decode or the un-routed draft dispatch)
+    proposer: Optional[str] = None
     cost_steps: float = 0.0
     #: prefill tokens this step computed — chunk tokens streamed (chunked
     #: engines) or whole-prompt compute at admission (monolithic), so
@@ -432,7 +440,9 @@ class PriorityPolicy(SchedulerPolicy):
         self.prefill_token_cost_steps = prefill_token_cost_steps
 
     def _gamma_ctrl_for(self, engine: InferenceEngine):
-        if self.gamma_ctrl is None and engine.spec_enabled:
+        if self.gamma_ctrl is None and (
+            engine.spec_enabled or engine.host_spec_enabled
+        ):
             from repro.spec.controller import AdaptiveGammaController
 
             sc = engine.spec_cfg
@@ -465,13 +475,22 @@ class PriorityPolicy(SchedulerPolicy):
         leftover = sum(len(q) for q in core.waiting.values()) > len(admit)
         steps = 1 if leftover else min(want, grant.max_cost_steps)
         plan = StepPlan(admit=admit, preempt_to_admit=self.preemption)
-        ctrl = self._gamma_ctrl_for(core.engine)
-        if core.engine.spec_enabled and ctrl is not None:
+        eng = core.engine
+        ctrl = self._gamma_ctrl_for(eng)
+        if (eng.spec_enabled or eng.host_spec_enabled) and ctrl is not None:
             g = ctrl.gamma_for(grant.phase if grant.phase is not None else "stable")
+            # grant-aware routing (DESIGN.md §10): the routed proposer sets
+            # the round price — a model-free host proposal spends ~1 step
+            # where a draft-model round spends 1 + (gamma+1)*cost_ratio
+            plan.proposer = eng.route_proposer(g)
+            round_cost = (
+                eng.proposer_round_cost(plan.proposer, g)
+                if plan.proposer is not None else ctrl.round_cost_steps(g)
+            )
             rounds = max(int(steps / ctrl.expected_tokens_per_round(g)), 1)
             plan.k = largest_bucket(rounds, self.k_buckets)
             plan.gamma = g
-            plan.cost_steps = plan.k * ctrl.round_cost_steps(g)
+            plan.cost_steps = plan.k * round_cost
         else:
             plan.k = largest_bucket(int(steps), self.k_buckets)
             plan.cost_steps = float(plan.k)
@@ -707,7 +726,11 @@ class EngineCore:
                 g.advance_clock(cost)
             if k > 0:
                 out.k = k
-                if plan.gamma is not None and eng.spec_enabled:
+                if plan.gamma is not None and plan.proposer is not None:
+                    out.gamma = plan.gamma
+                    out.proposer = plan.proposer
+                    eng._drive_proposed_loop(k, plan.gamma, plan.proposer)
+                elif plan.gamma is not None and eng.spec_enabled:
                     out.gamma = plan.gamma
                     eng._drive_spec_loop(k, plan.gamma)
                 else:
@@ -808,7 +831,9 @@ class EngineCore:
         sig = g.revocation
         inj = eng.fault_injector
         per_cost = (plan.cost_steps / k) if k > 0 else 0.0
-        spec = plan.gamma is not None and eng.spec_enabled
+        spec = plan.gamma is not None and (
+            eng.spec_enabled or plan.proposer is not None
+        )
         buckets = getattr(self.policy, "k_buckets", DECODE_K_BUCKETS)
         check = max(int(g.revoke_check_steps), 1)
         ran = 0
@@ -822,7 +847,9 @@ class EngineCore:
             if g.advance_clock is not None:
                 # absolute from quantum start: cumulative cost so far
                 g.advance_clock(pf_cost + (ran + k_sub) * per_cost)
-            if spec:
+            if spec and plan.proposer is not None:
+                eng._drive_proposed_loop(k_sub, plan.gamma, plan.proposer)
+            elif spec:
                 eng._drive_spec_loop(k_sub, plan.gamma)
             else:
                 eng._drive_decode_loop(k_sub)
@@ -830,6 +857,7 @@ class EngineCore:
         out.k = ran
         if spec and ran > 0:
             out.gamma = plan.gamma
+            out.proposer = plan.proposer
         if sig.revoked and ran < k:
             out.revoked = True
             self.obs.metrics.counter("fault/revocations").inc()
@@ -1018,7 +1046,7 @@ class EngineCore:
         for slot, rid in ran_slots.items():
             tr.span(
                 name, f"slot{slot}", t_mid, t1, k=out.k, gamma=out.gamma,
-                request_id=rid,
+                proposer=out.proposer, request_id=rid,
             )
         tr.quantum(
             t0, t1,
@@ -1031,7 +1059,8 @@ class EngineCore:
                 "max_cost_steps": _jnum(g.max_cost_steps),
                 "token_budget": _jnum(g.token_budget),
             },
-            k=out.k, gamma=out.gamma, cost_steps=out.cost_steps,
+            k=out.k, gamma=out.gamma, proposer=out.proposer,
+            cost_steps=out.cost_steps,
             prefill_tokens=out.prefill_tokens, revoked=out.revoked,
             admitted=list(out.admitted), preempted=list(out.preempted),
             finished=[cr.request_id for cr in out.finished],

@@ -204,6 +204,9 @@ class InferenceEngine:
         self.params = params
         self.clock: Callable[[], float] = clock or time.monotonic
         self.min_prefill_bucket = min_prefill_bucket
+        #: decode-path attention impl, kept for programs built after
+        #: construction (the host-proposed tree-verify rounds)
+        self._attn_impl = decode_impl
 
         # --- chunked prefill (DESIGN.md §7): None -> auto (on for attention
         # families, whose chunk attention is the verify shape; recurrent
@@ -367,6 +370,9 @@ class InferenceEngine:
         self.draft_params = draft_params
         self.draft_cache = None
         self.spec_cfg = spec or SpecDecodeConfig()
+        #: PRNG stream for simulated-acceptance modes (spec loop AND the
+        #: host-proposed tree rounds, which exist without a draft pairing)
+        self._spec_key = jax.random.PRNGKey(spec_seed)
         if self.spec_enabled:
             assert draft_cfg is not None, "draft_params without draft_cfg"
             assert draft_cfg.vocab_size == cfg.vocab_size, (
@@ -375,7 +381,6 @@ class InferenceEngine:
             dcache = T.init_cache(draft_cfg, max_slots, max_seq, compute_dtype)
             dcache["index"] = jnp.zeros((max_slots,), jnp.int32)
             self.draft_cache = dcache
-            self._spec_key = jax.random.PRNGKey(spec_seed)
             from repro.spec.loop import spec_decode_loop as _spec_fn
 
             self._spec_loop = jax.jit(
@@ -410,10 +415,103 @@ class InferenceEngine:
                     donate_argnames=("cache",),
                 )
 
+        # --- pluggable proposers + routing (DESIGN.md §10) --------------
+        #: name -> Proposer.  ``spec_cfg.proposer`` selects the initial
+        #: set: "auto" registers every applicable source on a DRAFT-PAIRED
+        #: engine (the draft model plus prompt-lookup n-gram on attention
+        #: families) but nothing on a plain engine — speculation stays
+        #: opt-in, so engines built without a draft pairing behave exactly
+        #: as before.  "draft"/"ngram" pin one ("ngram" enables host-only
+        #: speculation on a plain engine); "suffix" starts empty (a
+        #: corpus-backed ``StaticSuffixProposer`` needs the corpus —
+        #: callers attach it via ``register_proposer``); "none" disables
+        #: routing entirely.
+        self._proposers: dict = {}
+        self._router = None
+        self._tree_round_cache: dict = {}
+        #: per-slot (accepted, proposed) from the LAST fused spec loop —
+        #: the router's draft-path feedback
+        self._last_spec_slot_stats: dict = {}
+        pchoice = self.spec_cfg.proposer
+        if pchoice != "none":
+            from repro.spec.proposers import DraftModelProposer, NgramProposer
+
+            if self.spec_enabled and pchoice in ("auto", "draft"):
+                self._proposers["draft"] = DraftModelProposer(
+                    draft_cost_ratio=self.spec_cfg.draft_cost_ratio
+                )
+            if cfg.family in _ATTENTION_FAMILIES and (
+                pchoice == "ngram"
+                or (pchoice == "auto" and self.spec_enabled)
+            ):
+                self._proposers["ngram"] = NgramProposer(
+                    order=self.spec_cfg.ngram_order
+                )
+            if self._proposers:
+                self._rebuild_router()
+
     # ------------------------------------------------------------------
     @property
     def spec_enabled(self) -> bool:
         return self.draft_params is not None
+
+    @property
+    def host_spec_enabled(self) -> bool:
+        """True when a host-side (model-free) proposer is registered — the
+        tree-verify path is available even without a draft pairing."""
+        return any(p.kind == "host" for p in self._proposers.values())
+
+    @property
+    def proposer_router(self):
+        return self._router
+
+    def register_proposer(self, proposer) -> None:
+        """Attach an additional candidate source (e.g. a corpus-backed
+        ``StaticSuffixProposer``) and rebuild the router over the new set.
+        Host proposers need an attention family (tree verification needs
+        parallel position scoring)."""
+        if proposer.kind == "host":
+            assert self.cfg.family in _ATTENTION_FAMILIES, (
+                f"host proposers need an attention family, not "
+                f"{self.cfg.family!r}"
+            )
+        self._proposers[proposer.name] = proposer
+        self._rebuild_router()
+
+    def _rebuild_router(self) -> None:
+        from repro.spec.proposers import ProposerRouter
+
+        device = tuple(
+            n for n, p in self._proposers.items() if p.kind == "device"
+        )
+        self._router = ProposerRouter(
+            list(self._proposers),
+            device_names=device,
+            ewma=self.spec_cfg.router_ewma,
+            init_acceptance=self.spec_cfg.router_init_acceptance,
+            draft_cost_ratio=self.spec_cfg.draft_cost_ratio,
+        )
+
+    def route_proposer(self, gamma: int):
+        """Route the coming quantum: ONE proposer for the whole batch (the
+        engine dispatches one fused program per quantum), picked by summed
+        per-slot score.  Returns the name, or None when no proposer is
+        registered (callers fall back to the historical dispatch)."""
+        if self._router is None:
+            return None
+        slots = [
+            i for i, r in enumerate(self.slots)
+            if r is not None and not self.slot_prefilling(i)
+        ]
+        name = self._router.pick_majority(slots, gamma)
+        self.obs.metrics.counter("spec/proposer/router_switches").set(
+            self._router.switches
+        )
+        return name
+
+    def proposer_round_cost(self, name: str, gamma: int) -> float:
+        """Quantum steps one routed round will spend (grant pricing)."""
+        return self._router.round_cost(name, gamma)
 
     @property
     def spec_acceptance_rate(self) -> float:
@@ -626,6 +724,9 @@ class InferenceEngine:
         req = self.slots[i]
         assert req is not None, f"evict of empty slot {i}"
         self.slots[i] = None
+        if self._router is not None:
+            # recycled slots start from the optimistic prior again
+            self._router.reset_slot(i)
         # a mid-PREFILLING eviction drops the pending chunk streams: resume
         # re-prefills from the radix-covered prefix (partial chunk work past
         # it is recomputed — its pages were released with the slot)
@@ -1267,6 +1368,7 @@ class InferenceEngine:
         self.spec_rounds += k
         now = self.clock()
         finished = []
+        self._last_spec_slot_stats = {}
         for i, req in enumerate(self.slots):
             if req is None or self.slot_prefilling(i):
                 continue
@@ -1280,8 +1382,11 @@ class InferenceEngine:
                 n = int(n_np[j, i])
                 req.generated.extend(int(t) for t in toks_np[j, i, :n])
                 self.generated_tokens_total += n
-            self.spec_accepted += int(acc_np[:, i].sum())
-            self.spec_drafted += int(prop_np[:, i].sum())
+            slot_acc = int(acc_np[:, i].sum())
+            slot_prop = int(prop_np[:, i].sum())
+            self._last_spec_slot_stats[i] = (slot_acc, slot_prop)
+            self.spec_accepted += slot_acc
+            self.spec_drafted += slot_prop
             if self.paged:
                 self._slot_idx[i] = int(idx_np[i])
             if rem_np[i] == 0 or idx_np[i] + gamma >= self.max_seq:
@@ -1297,6 +1402,177 @@ class InferenceEngine:
             self._restore_draft_prefill_indices()
         if self.paged and self._bt_dirty:
             self._sync_block_tables()  # one upload covers trims + retires
+        return finished
+
+    # ------------------------------------------------------------------
+    # Host-proposed tree verification (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _tree_round_fn(self, parents: tuple, mode: str):
+        """Jitted ``tree_verify_round`` for one static topology.  Topologies
+        come from the gamma/width buckets, so the program set stays bounded
+        the same way the k/gamma buckets bound the fused loops."""
+        fn = self._tree_round_cache.get((parents, mode))
+        if fn is None:
+            from repro.spec.tree import tree_verify_round as _tree_fn
+
+            fn = jax.jit(
+                functools.partial(
+                    _tree_fn, self.cfg, parents=parents, mode=mode,
+                    max_seq=self.max_seq,
+                    sim_accept_p=self.spec_cfg.sim_accept_p,
+                    compute_dtype=self.compute_dtype,
+                    attn_impl=self._attn_impl,
+                ),
+                donate_argnames=("tokens", "cache", "remaining", "key"),
+            )
+            self._tree_round_cache[(parents, mode)] = fn
+        return fn
+
+    def _note_proposer_round(
+        self, name: str, rounds: int, accepted: int, proposed: int
+    ) -> None:
+        m = self.obs.metrics
+        m.counter(f"spec/proposer/rounds/{name}").inc(rounds)
+        m.counter(f"spec/proposer/proposed/{name}").inc(proposed)
+        m.counter(f"spec/proposer/accepted/{name}").inc(accepted)
+        ptot = m.counter(f"spec/proposer/proposed/{name}").value
+        if ptot:
+            m.gauge(f"spec/proposer/acceptance/{name}").set(
+                m.counter(f"spec/proposer/accepted/{name}").value / ptot
+            )
+
+    def _drive_proposed_loop(
+        self, k: int, gamma: int, proposer: Optional[str] = None
+    ) -> list[Request]:
+        """Run ``k`` routed speculative rounds; returns requests that
+        finished.
+
+        The routed proposer decides the machinery: the device-resident
+        draft model delegates to the fused ``_drive_spec_loop`` (k rounds,
+        one transfer), while a host proposer (n-gram / static-suffix) runs
+        ``k`` tree-verify rounds at ONE dispatch and one device->host
+        transfer EACH — the host must see a round's accepted tokens before
+        it can propose the next tree.  A round where the proposer has
+        nothing to offer (no history match anywhere) falls back to one
+        plain fused decode step instead of paying a doomed verify pass."""
+        from repro.spec.proposers.base import ProposeContext
+
+        if proposer is None:
+            proposer = self.route_proposer(gamma)
+        assert proposer is not None and proposer in self._proposers, (
+            f"no proposer routed (got {proposer!r})"
+        )
+        prop = self._proposers[proposer]
+        if prop.kind == "device":
+            a0, p0 = self.spec_accepted, self.spec_drafted
+            r0 = self.spec_rounds
+            finished = self._drive_spec_loop(k, gamma)
+            self._note_proposer_round(
+                proposer, self.spec_rounds - r0,
+                self.spec_accepted - a0, self.spec_drafted - p0,
+            )
+            for i, (acc, prp) in self._last_spec_slot_stats.items():
+                if self.slots[i] is not None:  # retired slots were reset
+                    self._router.observe(i, proposer, acc, prp)
+            return finished
+        width = max(1, self.spec_cfg.tree_width)
+        mode = "simulated" if self.spec_cfg.mode == "simulated" else "greedy"
+        finished: list[Request] = []
+        for _ in range(k):
+            if self.num_active == 0 or (
+                self.num_active == self.num_prefilling
+            ):
+                break
+            remaining = np.zeros((self.max_slots,), np.int32)
+            hists: list[list[int]] = [[] for _ in range(self.max_slots)]
+            for i, r in enumerate(self.slots):
+                if r is not None and not self.slot_prefilling(i):
+                    remaining[i] = max(
+                        r.max_new_tokens - len(r.generated), 0
+                    )
+                    hists[i] = [int(t) for t in r.prompt] + r.generated
+            if not remaining.any():
+                break
+            tree = prop.propose(ProposeContext(
+                histories=hists, active=remaining > 0, gamma=gamma,
+                width=width,
+            ))
+            if tree is None:
+                # no slot matched: the round IS zero-acceptance evidence —
+                # without it the optimistic prior would route a useless
+                # proposer forever (the counters stay clean: nothing was
+                # actually drafted or verified)
+                self.obs.metrics.counter(
+                    "spec/proposer/no_match_fallbacks"
+                ).inc()
+                for i in np.flatnonzero(remaining > 0):
+                    self._router.observe(int(i), proposer, 0, gamma)
+                finished.extend(self._drive_decode_loop(1))
+                continue
+            n_nodes = len(tree.parents)
+            if self.paged:
+                # worst case the round accepts a whole root-to-leaf path;
+                # node-index K/V slots need n_nodes positions regardless
+                self._top_up_pages(n_nodes)
+                if self.num_active == 0:
+                    break  # every slot fell to an allocator fault
+            self._maybe_inject_nan()
+            (
+                self.tokens, self.cache, rem, self._spec_key,
+                out, n_out, accepted, proposed, bad,
+            ) = self._tree_round_fn(tree.parents, mode)(
+                self.params, self.tokens, self.cache,
+                jnp.asarray(tree.tail), jnp.asarray(remaining),
+                self._spec_key,
+            )
+            toks_np, n_np, acc_np, prop_np, rem_np, idx_np, bad_np = (
+                jax.device_get((
+                    out, n_out, accepted, proposed, rem,
+                    self.cache["index"], bad,
+                ))
+            )
+            self.d2h_transfers += 1  # one per round: proposals need history
+            self.steps_executed += 1
+            self.spec_rounds += 1
+            self.obs.metrics.gauge("spec/proposer/tree_nodes").set(n_nodes)
+            round_acc = round_prop = 0
+            now = self.clock()
+            for i, req in enumerate(self.slots):
+                if req is None or self.slot_prefilling(i):
+                    continue
+                if bad_np[i]:
+                    self._quarantine_slot(i)
+                    continue
+                n = int(n_np[i])
+                req.generated.extend(int(t) for t in toks_np[i, :n])
+                self.generated_tokens_total += n
+                if self.paged:
+                    self._slot_idx[i] = int(idx_np[i])
+                if tree.matched[i]:
+                    acc, prp = int(acc_np[i]), int(prop_np[i])
+                    round_acc += acc
+                    round_prop += prp
+                    self._router.observe(i, proposer, acc, prp)
+                    prop.observe(i, acc, prp)
+                elif remaining[i] > 0:
+                    # the proposer declined THIS slot while serving others:
+                    # zero-acceptance routing evidence for the slot, but
+                    # not a drafted proposal (its filler row was always
+                    # going to be rejected), so the counters stay clean
+                    self._router.observe(i, proposer, 0, gamma)
+                if rem_np[i] == 0 or idx_np[i] + (
+                    n_nodes - 1
+                ) >= self.max_seq:
+                    finished.append(self._retire_slot(i, now))
+                elif self.paged:
+                    # rejected siblings past the accepted path: release the
+                    # pages the worst-case top-up provisioned beyond it
+                    self._trim_slot_pages(i)
+            self.spec_accepted += round_acc
+            self.spec_drafted += round_prop
+            self._note_proposer_round(proposer, 1, round_acc, round_prop)
+            if self.paged and self._bt_dirty:
+                self._sync_block_tables()
         return finished
 
     # ------------------------------------------------------------------

@@ -16,10 +16,20 @@ Modules:
   * ``rollback``   -- per-slot cache/state rewind past rejected tokens
   * ``loop``       -- the fused k-round ``spec_decode_loop`` (lax.scan)
   * ``controller`` -- adaptive gamma from Algorithm-1 phase + acceptance
+  * ``tree``       -- packed-tree verification: ancestor-mask kernel round,
+                      root-to-leaf acceptance, KV path compaction
+  * ``proposers``  -- pluggable candidate sources (draft model / n-gram /
+                      static suffix) + the acceptance-EWMA router
 """
 from repro.spec.controller import GAMMA_BUCKETS, AdaptiveGammaController
 from repro.spec.draft import draft_propose
 from repro.spec.loop import spec_decode_loop
+from repro.spec.tree import (
+    branching_tree,
+    linear_chain,
+    tree_greedy_accept,
+    tree_verify_round,
+)
 from repro.spec.verify import greedy_accept, sampled_accept, simulated_accept
 
 __all__ = [
@@ -30,4 +40,8 @@ __all__ = [
     "greedy_accept",
     "sampled_accept",
     "simulated_accept",
+    "branching_tree",
+    "linear_chain",
+    "tree_greedy_accept",
+    "tree_verify_round",
 ]

@@ -1,0 +1,305 @@
+"""Tree verification: score a packed candidate *tree* in one fused pass and
+accept the longest target-consistent root-to-leaf path.
+
+The linear speculative round (``spec.loop``) verifies one draft chain per
+slot.  Host-side proposers (``spec.proposers``) can cheaply produce several
+candidate branches — e.g. two n-gram continuations — and a single
+chunk-verify pass can score all of them at once if the intra-chunk causal
+triangle becomes an ancestor mask (``kernels/tree_verify_attention.py``).
+
+Packed-tree layout (the wire format every proposer emits):
+
+  * ``parents`` — a static tuple of length N; ``parents[0] == -1`` (node 0
+    is the ROOT: the slot's current, already-committed token) and
+    ``parents[j] < j`` (topological order), so any root-to-leaf path visits
+    strictly increasing node indices.  The topology is shared across the
+    batch per dispatch (it is compile-time static, like gamma); token
+    *content* is per-slot.
+  * node j's K/V occupies cache position ``index + j`` — the slot a linear
+    chunk would use — while its RoPE position is ``index + depth(j)`` so
+    sibling branches rotate identically.
+  * ``anc[j]`` — int32 bitmask of j's ancestors including j itself; bit i
+    set means node i is visible from node j.  N <= 31.
+
+Acceptance (greedy): walk from the root; at each step the child whose token
+equals the target argmax at the current node extends the path (first child
+wins on duplicate sibling tokens).  Emitted tokens are the target argmaxes
+along the accepted path plus the bonus/correction at the path's end —
+byte-identical to plain greedy decode, and to ``verify.greedy_accept`` when
+the tree is a single chain.  After acceptance the accepted path's K/V is
+COMPACTED to contiguous positions ``index .. index + a`` (gather-then-
+scatter; sources always sit at-or-after their destinations, and rejected
+siblings beyond the new index are dead under the stale-overwrite
+invariant).
+
+Attention families only: tree verification needs parallel position scoring,
+which the recurrent families' sequential state rules out — the engine keeps
+the draft-model chain path for those.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+#: int32 ancestor bitmasks bound the packed tree size.
+MAX_TREE_NODES = 31
+
+
+# ---------------------------------------------------------------------------
+# Static topology helpers (pure Python over the parents tuple)
+# ---------------------------------------------------------------------------
+
+
+def validate_parents(parents: tuple) -> None:
+    n = len(parents)
+    if n < 1 or n > MAX_TREE_NODES:
+        raise ValueError(f"tree must have 1..{MAX_TREE_NODES} nodes, got {n}")
+    if parents[0] != -1:
+        raise ValueError("node 0 must be the root (parents[0] == -1)")
+    for j, p in enumerate(parents[1:], start=1):
+        if not 0 <= p < j:
+            raise ValueError(
+                f"parents[{j}] = {p}: parents must precede children"
+            )
+
+
+def linear_chain(gamma: int) -> tuple:
+    """The chain topology: root + gamma nodes, each the previous one's
+    child.  Tree verification over this topology is bit-identical to the
+    linear chunk-verify path."""
+    return (-1,) + tuple(range(gamma))
+
+
+def branching_tree(width: int, depth: int) -> tuple:
+    """``width`` independent chains of ``depth`` nodes sharing the root —
+    the packed layout for multi-candidate n-gram continuations."""
+    parents = [-1]
+    for _ in range(width):
+        prev = 0
+        for _ in range(depth):
+            parents.append(prev)
+            prev = len(parents) - 1
+    return tuple(parents)
+
+
+def tree_depths(parents: tuple) -> np.ndarray:
+    """[N] int32 node depths (root = 0)."""
+    validate_parents(parents)
+    d = np.zeros(len(parents), np.int32)
+    for j, p in enumerate(parents[1:], start=1):
+        d[j] = d[p] + 1
+    return d
+
+
+def tree_ancestor_masks(parents: tuple) -> np.ndarray:
+    """[N] int32 ancestor bitmasks (self bit set).  A linear chain yields
+    cumulative masks ``0b1, 0b11, 0b111, ...`` — the causal triangle."""
+    validate_parents(parents)
+    anc = np.zeros(len(parents), np.int32)
+    anc[0] = 1
+    for j, p in enumerate(parents[1:], start=1):
+        anc[j] = anc[p] | (1 << j)
+    return anc
+
+
+def tree_max_depth(parents: tuple) -> int:
+    return int(tree_depths(parents).max())
+
+
+# ---------------------------------------------------------------------------
+# Acceptance
+# ---------------------------------------------------------------------------
+
+
+def tree_greedy_accept(
+    parents: tuple,
+    tree_tokens: jax.Array,  # [B, N] int32; node 0 = current token
+    target_logits: jax.Array,  # [B, N, V]
+    remaining: jax.Array,  # [B] int32 token budgets
+    *,
+    match: jax.Array | None = None,  # override: [B, N] bool (simulated mode)
+):
+    """Greedy root-to-leaf acceptance over a packed tree.
+
+    Returns ``(a, nxt, out, a_match, path_idx)``: ``a`` the accepted
+    candidate count (clamped to the budget, ``a + 1 <= remaining``),
+    ``nxt`` the next current token, ``out`` [B, D+1] the emitted row
+    (D = max tree depth; entries past ``a`` are 0), ``a_match`` the
+    unclamped accepted run (the proposer-quality signal), and ``path_idx``
+    [B, N] the node index of the accepted path at each depth (identity
+    past the path — the KV compaction map)."""
+    b, n = tree_tokens.shape
+    depths = tree_depths(parents)
+    d_max = int(depths.max())
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, N]
+    if match is None:
+        # candidate j extends the path iff its token equals the target
+        # argmax at its parent
+        par = jnp.asarray([max(p, 0) for p in parents], jnp.int32)
+        tgt_par = jnp.take_along_axis(tgt, jnp.broadcast_to(par, (b, n)), 1)
+        match = tree_tokens == tgt_par
+    # Walk in node order (parents precede children): a node is on the path
+    # iff its parent is, its token matches, and no earlier sibling already
+    # claimed the parent (first child wins on duplicates).
+    on = jnp.zeros((b, n), bool).at[:, 0].set(True)
+    claimed = jnp.zeros((b, n), bool)
+    for j in range(1, n):
+        p = parents[j]
+        ok = on[:, p] & match[:, j] & ~claimed[:, p]
+        on = on.at[:, j].set(ok)
+        claimed = claimed.at[:, p].set(claimed[:, p] | ok)
+    a_match = on.sum(axis=1).astype(jnp.int32) - 1  # candidates on the path
+    a = jnp.clip(jnp.minimum(a_match, remaining - 1), 0, d_max)
+    # path_idx[b, d] = index of the path node at depth d (0 past the leaf):
+    # one-hot over depths contracted against the on-path indicator.
+    depth_sel = (jnp.asarray(depths)[None, :] == jnp.arange(n)[:, None])
+    node_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    path_at_depth = jnp.einsum(
+        "bn,dn->bd", (on * node_ids).astype(jnp.int32), depth_sel.astype(jnp.int32)
+    )  # [B, N] (depth axis padded to N)
+    # Emitted row: target argmaxes along the path — out[j] = tgt[path[j]]
+    # for j <= a (at j == a this is the bonus/correction), 0 beyond.
+    jpos = jnp.arange(d_max + 1)[None, :]
+    gather = jnp.take_along_axis(tgt, path_at_depth[:, : d_max + 1], axis=1)
+    out = jnp.where(jpos <= a[:, None], gather, 0)
+    nxt = jnp.take_along_axis(gather, a[:, None], axis=1)[:, 0]
+    # KV compaction map: path node at each depth while on the path,
+    # identity beyond (those slots are stale either way).
+    node_pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    path_idx = jnp.where(node_pos <= a[:, None], path_at_depth, node_pos)
+    return a, nxt, out, a_match, path_idx
+
+
+# ---------------------------------------------------------------------------
+# KV path compaction
+# ---------------------------------------------------------------------------
+
+
+def _compact_dense(kc: jax.Array, idx0: jax.Array, comp: jax.Array):
+    """Gather the accepted path's rows to contiguous positions.
+
+    kc: [B, S, kvH, hd]; idx0: [B]; comp: [B, N] source node index for each
+    destination slot d (``comp[b, d] >= d``, so the gather completes before
+    any destination it reads from is overwritten)."""
+    s = kc.shape[1]
+    src = jnp.minimum(idx0[:, None] + comp, s - 1)  # [B, N]
+    vals = jnp.take_along_axis(kc, src[:, :, None, None], axis=1)
+    upd = jax.vmap(
+        lambda c, v, i: jax.lax.dynamic_update_slice_in_dim(c, v, i, axis=0)
+    )
+    return upd(kc, vals.astype(kc.dtype), idx0)
+
+
+def _compact_paged(pool, block_tables, idx0, comp):
+    """Paged analog of ``_compact_dense``: gather through the block table,
+    scatter back at node-index positions (``layers.paged_kv_write``)."""
+    from repro.models import layers as L
+
+    n = comp.shape[1]
+    page = pool.shape[1]
+    w = block_tables.shape[1]
+    src = idx0[:, None] + comp  # [B, N] logical positions
+    cols = jnp.minimum(src // page, w - 1)
+    pages = jnp.take_along_axis(block_tables, cols, axis=1)  # [B, N]
+    vals = pool[pages, src % page]  # [B, N, kvH, hd]
+    dst = idx0[:, None] + jnp.arange(n)[None, :]
+    return L.paged_kv_write(pool, vals, block_tables, dst)
+
+
+def compact_accepted_path(cache, comp: jax.Array):
+    """Rewrite every layer's chunk-region K/V so the accepted path is
+    contiguous at ``index .. index + a`` (cache index not yet advanced).
+    ``comp`` [B, N] maps destination slot -> source node; inactive slots
+    pass the identity map (a value-preserving rewrite)."""
+    idx0 = cache["index"]
+    bt = cache.get("block_tables")
+    k, v = cache["layers"]["k"], cache["layers"]["v"]
+    if bt is None:
+        fn = jax.vmap(lambda c: _compact_dense(c, idx0, comp))
+    else:
+        fn = jax.vmap(lambda c: _compact_paged(c, bt, idx0, comp))
+    return dict(cache, layers={"k": fn(k), "v": fn(v)})
+
+
+# ---------------------------------------------------------------------------
+# The host-proposed tree-verify round
+# ---------------------------------------------------------------------------
+
+
+def tree_verify_round(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,  # [B] current tokens (the tree roots)
+    cache,
+    tail_tokens: jax.Array,  # [B, N-1] proposed candidate tokens
+    remaining: jax.Array,  # [B] int32 budgets
+    key: jax.Array,
+    *,
+    parents: tuple,
+    mode: str = "greedy",
+    max_seq: int,
+    sim_accept_p: float = 0.9,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+):
+    """ONE propose-free verify/accept round over a packed candidate tree.
+
+    The candidates come from a host-side proposer (n-gram / static-suffix)
+    at zero model cost, so the round is: embed the N tree nodes, ONE fused
+    tree-verify pass, accept the longest root-to-leaf path, compact its
+    K/V, rewind the index.  One dispatch and one device->host transfer per
+    round — the host must see the accepted tokens before it can propose the
+    next tree.
+
+    Returns ``(tokens, cache, remaining, key, out [B, D+1], n_out [B],
+    accepted [B], proposed [B], bad [B])`` with the same per-slot freeze
+    semantics and NaN screen as ``spec.loop.spec_round``."""
+    n = len(parents)
+    validate_parents(parents)
+    depths = jnp.asarray(tree_depths(parents))
+    anc_row = jnp.asarray(tree_ancestor_masks(parents))
+    b = tokens.shape[0]
+    idx0 = cache["index"]
+    active = (remaining > 0) & (idx0 + (n - 1) < max_seq)
+    tree_tokens = jnp.concatenate([tokens[:, None], tail_tokens], axis=1)
+    logits, cache, _ = T.decode_chunk(
+        cfg, params, tree_tokens, cache, compute_dtype=compute_dtype,
+        attn_impl=attn_impl, anc=jnp.broadcast_to(anc_row, (b, n)),
+        depths=depths,
+    )
+    bad = active & ~jnp.isfinite(logits).all(axis=(-2, -1))
+    if mode == "greedy":
+        a, nxt, out, a_match, path_idx = tree_greedy_accept(
+            parents, tree_tokens, logits, remaining
+        )
+    elif mode == "simulated":
+        # benchmark-only (see verify.simulated_accept): path-extension
+        # outcomes are Bernoulli draws, the cost profile is the real path
+        key, k_acc = jax.random.split(key)
+        match = jax.random.uniform(key=k_acc, shape=(b, n)) < sim_accept_p
+        a, nxt, out, a_match, path_idx = tree_greedy_accept(
+            parents, tree_tokens, logits, remaining, match=match
+        )
+    else:
+        raise ValueError(f"unknown tree verification mode {mode!r}")
+
+    # decode_chunk advanced index by N; rebase before compaction + rewind
+    cache = dict(cache, index=idx0)
+    comp = jnp.where(active[:, None], path_idx, jnp.arange(n)[None, :])
+    cache = compact_accepted_path(cache, comp)
+    n_out = jnp.where(active, a + 1, 0)
+    new_idx = jnp.where(active, idx0 + a + 1, idx0)
+    tokens = jnp.where(active, nxt, tokens)
+    cache = dict(cache, index=new_idx)
+    remaining = remaining - n_out
+    out = jnp.where(active[:, None], out, 0)
+    accepted = jnp.where(active, a_match, 0)
+    proposed = jnp.where(active, n - 1, 0)
+    return (
+        tokens, cache, remaining, key, out, n_out, accepted, proposed, bad
+    )

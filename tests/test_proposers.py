@@ -1,0 +1,205 @@
+"""Model-free proposers and adaptive routing (DESIGN.md §10).
+
+Pins the behaviors the subsystem's contract names: prompt-lookup proposals
+are a pure deterministic function of the histories (with ``None`` on
+no-match so the engine can fall back), the static-suffix table is built
+first-occurrence-wins, the router's per-slot acceptance EWMA converges away
+from a proposer that stops delivering (and prices host rounds cheaper than
+draft-model rounds), and an engine driven end-to-end through the routed
+n-gram path emits the byte-identical greedy stream as plain decode while
+the ``spec/proposer/*`` metrics flow.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SpecDecodeConfig
+from repro.models import transformer as T
+from repro.serving.engine import InferenceEngine, Request
+from repro.spec.proposers import (
+    NgramProposer,
+    ProposerRouter,
+    StaticSuffixProposer,
+)
+from repro.spec.proposers.base import ProposeContext
+from repro.spec.tree import branching_tree, linear_chain
+
+
+def _ctx(hists, gamma, width=1):
+    return ProposeContext(
+        histories=hists,
+        active=np.array([len(h) > 0 for h in hists], bool),
+        gamma=gamma,
+        width=width,
+    )
+
+
+# ---------------------------------------------------------------------------
+# NgramProposer
+# ---------------------------------------------------------------------------
+
+def test_ngram_is_deterministic_and_matches_history():
+    p = NgramProposer(order=3)
+    hist = [1, 2, 3, 4, 5, 1, 2, 3, 4, 5]  # trailing [3,4,5] recurs at 2..4
+    t1 = p.propose(_ctx([hist], gamma=3))
+    t2 = p.propose(_ctx([hist], gamma=3))
+    assert t1 is not None
+    assert t1.parents == linear_chain(3) == t2.parents
+    np.testing.assert_array_equal(t1.tail, t2.tail)
+    np.testing.assert_array_equal(t1.matched, [True])
+    # the earlier occurrence of [3,4,5] ends at index 4; what followed it
+    # is the proposal
+    np.testing.assert_array_equal(t1.tail[0], [1, 2, 3])
+
+
+def test_ngram_no_match_returns_none():
+    p = NgramProposer(order=3)
+    assert p.propose(_ctx([[1, 2, 3, 4, 5, 6]], gamma=2)) is None
+    assert p.propose(_ctx([[1, 2]], gamma=2)) is None  # shorter than order
+    # inactive slots never match even with a repetitive history
+    ctx = ProposeContext(
+        histories=[[1, 2, 3, 1, 2, 3]], active=np.array([False]), gamma=2,
+    )
+    assert p.propose(ctx) is None
+
+
+def test_ngram_width_proposes_distinct_branches():
+    p = NgramProposer(order=3)
+    # trailing [7,8,9] recurs twice with different continuations; most
+    # recent occurrence proposes branch 0
+    hist = [7, 8, 9, 1, 7, 8, 9, 2, 7, 8, 9]
+    t = p.propose(_ctx([hist], gamma=1, width=2))
+    assert t is not None
+    assert t.parents == branching_tree(2, 1)
+    np.testing.assert_array_equal(t.tail[0], [2, 1])
+
+
+# ---------------------------------------------------------------------------
+# StaticSuffixProposer
+# ---------------------------------------------------------------------------
+
+def test_suffix_table_completes_known_prefixes():
+    p = StaticSuffixProposer([[1, 2, 3, 4, 5]], order=2)
+    t = p.propose(_ctx([[9, 9, 1, 2]], gamma=3))
+    assert t is not None
+    np.testing.assert_array_equal(t.tail[0], [3, 4, 5])
+    assert p.propose(_ctx([[9, 9, 9, 9]], gamma=3)) is None
+
+
+def test_suffix_table_first_occurrence_wins():
+    p = StaticSuffixProposer([[1, 2, 9], [1, 2, 3]], order=2)
+    t = p.propose(_ctx([[1, 2]], gamma=1))
+    np.testing.assert_array_equal(t.tail[0], [9])
+
+
+# ---------------------------------------------------------------------------
+# ProposerRouter
+# ---------------------------------------------------------------------------
+
+def test_router_prices_host_rounds_cheaper_than_draft():
+    r = ProposerRouter(["draft", "ngram"], device_names=("draft",),
+                       draft_cost_ratio=0.25)
+    assert r.round_cost("ngram", 4) == 1.0
+    assert r.round_cost("draft", 4) == 1.0 + 5 * 0.25
+    # equal (optimistic) acceptance -> the model-free proposer wins
+    assert r.pick(0, gamma=4) == "ngram"
+
+
+def test_router_ewma_converges_away_from_a_dead_proposer():
+    r = ProposerRouter(["draft", "ngram"], device_names=("draft",),
+                       ewma=0.5, init_acceptance=0.7)
+    assert r.pick(0, gamma=4) == "ngram"
+    picks = []
+    for _ in range(6):
+        r.observe(0, "ngram", accepted=0, proposed=4)
+        picks.append(r.pick(0, gamma=4))
+    assert picks[-1] == "draft", "router never abandoned the dead proposer"
+    assert r.switches >= 1
+    assert r.acceptance(0, "ngram") < 0.2 < r.acceptance(0, "draft")
+    # zero-proposal rounds are not evidence (nothing was verified)
+    before = r.acceptance(0, "draft")
+    r.observe(0, "draft", accepted=0, proposed=0)
+    assert r.acceptance(0, "draft") == before
+
+
+def test_router_reset_slot_restores_optimism():
+    r = ProposerRouter(["ngram"], device_names=(), init_acceptance=0.7)
+    for _ in range(4):
+        r.observe(2, "ngram", accepted=0, proposed=4)
+    assert r.acceptance(2, "ngram") < 0.7
+    r.reset_slot(2)
+    assert r.acceptance(2, "ngram") == 0.7
+
+
+def test_router_pick_majority_routes_one_choice_for_the_batch():
+    r = ProposerRouter(["draft", "ngram"], device_names=("draft",))
+    # slot 0 loves ngram, slot 1 hates it; majority is by summed score
+    for _ in range(6):
+        r.observe(0, "ngram", accepted=4, proposed=4)
+        r.observe(1, "ngram", accepted=0, proposed=4)
+    assert r.pick_majority([0, 1], gamma=4) in ("draft", "ngram")
+    # an empty slot list still routes (registration order)
+    assert r.pick_majority([], gamma=4) == "draft"
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+CFG = configs.smoke_config("qwen3-1.7b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_auto_stays_inert_on_plain_engines():
+    """``proposer="auto"`` must not change an engine without a draft
+    pairing: no proposers, no router, no host spec — plain engines behave
+    exactly as before the subsystem existed."""
+    eng = InferenceEngine(CFG, PARAMS, max_slots=2, max_seq=32)
+    assert not eng.host_spec_enabled
+    assert eng.proposer_router is None
+    assert eng.route_proposer(2) is None
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_ngram_stream_matches_plain_greedy(paged):
+    """Host-only speculation end to end: the routed n-gram path (tree
+    verify, rollback, history absorption) emits the byte-identical stream
+    as plain fused decode on prefix-heavy traffic, and the proposer
+    metrics family records the rounds."""
+    kw = {"kv_page_size": 8 if paged else 0}
+    prompt = np.tile([3, 5, 7, 9, 11], 6)
+    plain = InferenceEngine(CFG, PARAMS, max_slots=2, max_seq=128,
+                            compute_dtype=jnp.float32, **kw)
+    spec = InferenceEngine(CFG, PARAMS, max_slots=2, max_seq=128,
+                           compute_dtype=jnp.float32,
+                           spec=SpecDecodeConfig(proposer="ngram"), **kw)
+    assert spec.host_spec_enabled and not spec.spec_enabled
+    rp = [Request(prompt=prompt, max_new_tokens=12) for _ in range(2)]
+    rs = [Request(prompt=prompt, max_new_tokens=12) for _ in range(2)]
+    for r in rp:
+        assert plain.add_request(r)
+    for r in rs:
+        assert spec.add_request(r)
+    while plain.num_active:
+        plain.decode_loop(4)
+    guard = 0
+    while spec.num_active:
+        spec._drive_proposed_loop(2, 3)  # routes (ngram is the only one)
+        guard += 1
+        assert guard < 64
+    for a, b in zip(rp, rs):
+        assert b.generated == a.generated
+        assert len(b.generated) == 12
+    m = spec.obs.metrics
+    rounds = m.counter("spec/proposer/rounds/ngram").value
+    fallbacks = m.counter("spec/proposer/no_match_fallbacks").value
+    assert rounds + fallbacks > 0
+    assert rounds > 0, "prompt-lookup never matched on periodic traffic"
+    assert m.counter("spec/proposer/proposed/ngram").value > 0
+    assert (
+        m.counter("spec/proposer/accepted/ngram").value
+        <= m.counter("spec/proposer/proposed/ngram").value
+    )
