@@ -966,6 +966,133 @@ def bench_early_resume(num_iterations=6):
     return rows
 
 
+def bench_journal(num_online=8, offline_budget=32):
+    """Write-ahead journal overhead + replay recovery (DESIGN.md §11):
+    the SAME mixed online/offline EngineCore workload runs twice —
+    journal attached vs detached — on the virtual clock.  Journal I/O
+    happens on the host between quanta and must never perturb the
+    schedule, so the deterministic rows (virtual completion time, total
+    tokens, finished count) are REQUIRED to be identical across the pair;
+    ``scripts/check_bench_regression.py`` enforces that (trivially within
+    the <=5% step-time budget).  The wall rows are informational
+    (host-load + fsync noise).
+
+    The recovery rows replay the journaled run's log into a FRESH engine
+    after a simulated crash (truncate to the last fsync) and report the
+    wall cost and volume of deterministic replay recovery."""
+    import os
+    import tempfile
+
+    from repro.resilience import RequestJournal
+    from repro.serving.core import (
+        EngineCore, Grant, Priority, PriorityPolicy, SamplingParams,
+    )
+
+    cfg = configs.smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    step_s = 0.002
+    rows = []
+
+    def fresh_core():
+        vnow = [0.0]
+        engine = InferenceEngine(
+            cfg, params, max_slots=2, max_seq=128, clock=lambda: vnow[0],
+        )
+        return EngineCore(engine, policy=PriorityPolicy()), vnow
+
+    def submit(core):
+        rng = np.random.default_rng(0)
+        for _ in range(2):
+            core.submit(
+                rng.integers(0, cfg.vocab_size, 8),
+                SamplingParams(max_new_tokens=offline_budget),
+                priority=Priority.OFFLINE, arrival_time=0.0,
+            )
+        for t in np.cumsum(rng.exponential(0.02, num_online)):
+            core.submit(
+                rng.integers(0, cfg.vocab_size, 8),
+                SamplingParams(max_new_tokens=4),
+                priority=Priority.ONLINE, arrival_time=float(t),
+            )
+
+    def drain(core, vnow, max_quanta=None):
+        quanta = 0
+        while core.has_unfinished:
+            if max_quanta is not None and quanta >= max_quanta:
+                return False
+            out = core.step(Grant(
+                now=vnow[0],
+                advance_clock=lambda steps: vnow.__setitem__(
+                    0, vnow[0] + steps * step_s
+                ),
+            ))
+            quanta += 1
+            if out.cost_steps == 0 and not out.admitted:
+                vnow[0] += step_s
+        return True
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "bench.journal.jsonl")
+        for policy, journaled in (("journaled", True), ("unjournaled", False)):
+            core, vnow = fresh_core()
+            journal = None
+            if journaled:
+                journal = RequestJournal(path, fsync_interval=8)
+                journal.attach(core)
+            t0 = time.perf_counter()
+            submit(core)
+            drain(core, vnow)
+            wall = time.perf_counter() - t0
+            if journal is not None:
+                journal.close()
+            tokens = sum(
+                len(r.output_tokens) for r in core.requests.values()
+            )
+            finished = sum(
+                1 for r in core.requests.values() if r.state.finished
+            )
+            rows.append(("micro", "journal:virtual_time_s(mixed_load)",
+                         policy, "s", round(vnow[0], 6)))
+            rows.append(("micro", "journal:tokens(mixed_load)", policy,
+                         "count", tokens))
+            rows.append(("micro", "journal:finished(mixed_load)", policy,
+                         "count", finished))
+            rows.append(("micro", "journal:run_wall_ms(mixed_load)", policy,
+                         "ms", round(wall * 1e3, 1)))
+            if journal is not None:
+                m = core.obs.metrics
+                appends = m.counter("journal/appends").value
+                rows.append(("micro", "journal:appends", policy, "count",
+                             appends))
+                rows.append(("micro", "journal:bytes", policy, "count",
+                             m.counter("journal/bytes").value))
+
+        # crash mid-run, then replay the surviving journal into a fresh
+        # engine: the recovery rows the CI gate requires to be non-trivial
+        crash_path = os.path.join(tmp, "crash.journal.jsonl")
+        core, vnow = fresh_core()
+        journal = RequestJournal(crash_path, fsync_interval=4)
+        journal.attach(core)
+        submit(core)
+        drain(core, vnow, max_quanta=6)
+        journal.crash()
+        core2, vnow2 = fresh_core()
+        journal2 = RequestJournal(crash_path, fsync_interval=4)
+        report = journal2.recover_into(core2)
+        journal2.attach(core2)
+        drain(core2, vnow2)
+        journal2.close()
+        rows.append(("micro", "journal:recovery_wall_ms", "recovered",
+                     "ms", round(report.duration_s * 1e3, 3)))
+        rows.append(("micro", "journal:recovered_requests", "recovered",
+                     "count", report.restored))
+        rows.append(("micro", "journal:replayed_tokens", "recovered",
+                     "count", report.replayed_tokens))
+        rows.append(("micro", "journal:resumed_inflight", "recovered",
+                     "count", report.resumed_inflight))
+    return rows
+
+
 def all_rows():
     return (
         bench_engine_microstep()
@@ -981,4 +1108,5 @@ def all_rows():
         + bench_degradation()
         + bench_revocation()
         + bench_early_resume()
+        + bench_journal()
     )

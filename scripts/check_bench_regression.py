@@ -209,6 +209,49 @@ def main() -> int:
               "the revocation-throughput gate has gone stale")
         return 1
 
+    # --- journal + recovery gates (DESIGN.md §11) ----------------------
+    # bench_journal runs the same mixed-load workload journaled vs
+    # unjournaled on the virtual clock (journal I/O is host-side, so the
+    # deterministic rows must match exactly — trivially inside the <=5%
+    # step-time budget), then crashes a journaled run and replays the
+    # surviving log into a fresh engine.
+    j_vt = by_policy.get(("journal:virtual_time_s(mixed_load)", "journaled"))
+    u_jvt = by_policy.get(
+        ("journal:virtual_time_s(mixed_load)", "unjournaled")
+    )
+    j_tok = by_policy.get(("journal:tokens(mixed_load)", "journaled"))
+    u_jtok = by_policy.get(("journal:tokens(mixed_load)", "unjournaled"))
+    j_fin = by_policy.get(("journal:finished(mixed_load)", "journaled"))
+    u_jfin = by_policy.get(("journal:finished(mixed_load)", "unjournaled"))
+    appends = by_policy.get(("journal:appends", "journaled"))
+    rec_req = by_policy.get(("journal:recovered_requests", "recovered"))
+    rec_wall = by_policy.get(("journal:recovery_wall_ms", "recovered"))
+    if None in (j_vt, u_jvt, j_tok, u_jtok, j_fin, u_jfin, appends,
+                rec_req, rec_wall):
+        print(f"check_bench_regression: journal/recovery rows missing "
+              f"from {path}")
+        return 1
+    print(f"journal: virtual time journaled {j_vt}s vs unjournaled "
+          f"{u_jvt}s; tokens {j_tok}/{u_jtok}; finished {j_fin}/{u_jfin}; "
+          f"{appends} appends; recovery replayed {rec_req} requests in "
+          f"{rec_wall} ms")
+    if not j_vt <= u_jvt * 1.05:
+        print("FAIL: journaling cost >5% extra virtual-clock step time")
+        return 1
+    if j_tok != u_jtok or j_fin != u_jfin:
+        print("FAIL: journaling perturbed the deterministic schedule "
+              "(token/finished rows differ between journaled and "
+              "unjournaled)")
+        return 1
+    if appends < 1:
+        print("FAIL: the journaled run appended no records — the journal "
+              "wiring is dead")
+        return 1
+    if rec_req < 1:
+        print("FAIL: replay recovery restored no requests — the crash "
+              "workload has gone stale")
+        return 1
+
     # --- proposer + tree-verify gates (DESIGN.md §10) ------------------
     # bench_proposers measures the host n-gram proposer on prefix-heavy
     # offline traffic (simulated acceptance, same rationale as the spec

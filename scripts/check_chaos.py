@@ -26,7 +26,23 @@ reproducible from its seed alone:
   no-serving baseline exactly — revocation is how serving pays for the
   overrun, so training never does.
 
+* **Recovery sweep** (DESIGN.md §11) — the same mixed workload with the
+  ``process/kill`` fault point armed (both consult sites: between and
+  mid-quantum) and a write-ahead journal attached.  Each kill abandons
+  the engine, truncates the journal to its fsynced prefix (the real loss
+  model), rebuilds a fresh engine, and replays.  Pass criteria per seed,
+  for BOTH the paged and dense KV layouts:
+
+  - exactly-once: every submitted request has exactly one durable
+    finish record — nothing lost, nothing duplicated;
+  - byte-identity: every clean finish's journaled token stream equals
+    the uninterrupted (never-killed) reference run's;
+  - attribution still telescopes on the final incarnation's tracer.
+
     JAX_PLATFORMS=cpu PYTHONPATH=src python scripts/check_chaos.py
+    # or one sweep only:
+    JAX_PLATFORMS=cpu PYTHONPATH=src python scripts/check_chaos.py \\
+        --only recovery
 """
 from __future__ import annotations
 
@@ -44,7 +60,13 @@ from repro import configs  # noqa: E402
 from repro.configs.base import SpecInFConfig  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.obs import Observability  # noqa: E402
-from repro.resilience import FaultInjector, FaultSpec  # noqa: E402
+from repro.resilience import (  # noqa: E402
+    FaultInjector,
+    FaultSpec,
+    ProcessKilled,
+    RequestJournal,
+    read_journal,
+)
 from repro.serving.core import (  # noqa: E402
     Grant,
     Priority,
@@ -241,12 +263,198 @@ def resume_sweep() -> int:
     return failures
 
 
-def main() -> int:
-    print(f"serving chaos sweep: seeds {SERVE_SEEDS}, "
-          f"{len(SERVE_SPECS)} fault points armed")
-    failures = serve_sweep()
-    print(f"early-resume sweep: seeds {RESUME_SEEDS}")
-    failures += resume_sweep()
+# ---------------------------------------------------------------------------
+# Recovery sweep: kill -> restore -> drain (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+RECOVERY_SEEDS = (1, 2, 3, 4, 5)
+MAX_RESTARTS = 10  # a kill budget of 3 can never need more
+
+
+def _recovery_engine(vnow, injector, paged):
+    kw = {"kv_pool_pages": 24} if paged else {"kv_page_size": 0}
+    return InferenceEngine(
+        CFG, PARAMS, max_slots=2, max_seq=128, clock=lambda: vnow[0],
+        obs=Observability(tracing=True), fault_injector=injector, **kw,
+    )
+
+
+def _submit_workload(core):
+    """The serve_sweep workload, resubmitted identically per run."""
+    rng = np.random.default_rng(0)
+    reqs = [
+        core.submit(
+            rng.integers(0, CFG.vocab_size, 8),
+            SamplingParams(max_new_tokens=16),
+            priority=Priority.OFFLINE, arrival_time=0.0,
+        )
+        for _ in range(4)
+    ]
+    for t in np.cumsum(rng.exponential(0.01, 6)):
+        reqs.append(core.submit(
+            rng.integers(0, CFG.vocab_size, 8),
+            SamplingParams(max_new_tokens=4, deadline_s=5.0),
+            priority=Priority.ONLINE, arrival_time=float(t),
+        ))
+    return reqs
+
+
+def _drain(core, vnow):
+    quanta = 0
+    while core.has_unfinished:
+        quanta += 1
+        if quanta > MAX_QUANTA:
+            raise RuntimeError(
+                f"drain exceeded {MAX_QUANTA} quanta — containment hang"
+            )
+        base = vnow[0]
+        out = core.step(Grant(
+            now=base, token_budget=16,
+            revocation=RevocationSignal(), revoke_check_steps=2,
+            advance_clock=lambda steps, b=base: vnow.__setitem__(
+                0, b + steps * STEP_S
+            ),
+        ))
+        if out.cost_steps == 0 and not out.admitted:
+            vnow[0] += STEP_S
+
+
+def _journal_streams(path):
+    """(tokens, finish-records) per request id from the durable journal."""
+    records, _ = read_journal(path)
+    toks: dict = {}
+    fins: dict = {}
+    for rec in records:
+        if rec["k"] == "delta":
+            cur = toks.setdefault(rec["rid"], [])
+            if rec["tot"] == len(cur) + len(rec["tok"]):
+                cur.extend(rec["tok"])
+        elif rec["k"] == "fin":
+            fins.setdefault(rec["rid"], []).append(rec)
+    return toks, fins
+
+
+def kill_run(seed, path, paged):
+    """Run the workload to completion across simulated process deaths.
+
+    Returns ``(final_engine, rid0, restarts, kills)``: each ProcessKilled
+    abandons the engine, truncates the journal to its fsynced prefix, and
+    rebuilds from replay — the workload is submitted exactly once, in the
+    first incarnation."""
+    inj = FaultInjector(seed=seed, specs=(
+        FaultSpec("process/kill", probability=0.05, max_fires=3),
+    ))
+    restarts = 0
+    rid0 = None
+    while True:
+        vnow = [0.0]
+        engine = _recovery_engine(vnow, inj, paged)
+        core = engine.core
+        core.fault_backoff_s = 0.0
+        journal = RequestJournal(path, fsync_interval=4)
+        journal.recover_into(core)
+        journal.attach(core)
+        if rid0 is None:
+            rid0 = _submit_workload(core)[0].request_id
+        try:
+            _drain(core, vnow)
+        except ProcessKilled:
+            journal.crash()
+            restarts += 1
+            if restarts > MAX_RESTARTS:
+                raise RuntimeError("kill/restore loop did not converge")
+            continue
+        journal.close()
+        return engine, rid0, restarts, inj.total_fires
+
+
+def recovery_sweep(tmpdir) -> int:
+    failures = 0
+    total_kills = 0
+    for paged in (True, False):
+        layout = "paged" if paged else "dense"
+        vnow = [0.0]
+        ref_core = _recovery_engine(vnow, None, paged).core
+        ref = _submit_workload(ref_core)
+        _drain(ref_core, vnow)
+        assert all(r.finish_reason in CLEAN_REASONS for r in ref), (
+            "kill-free reference must finish every request normally"
+        )
+        for seed in RECOVERY_SEEDS:
+            path = os.path.join(tmpdir, f"journal_{layout}_s{seed}.jsonl")
+            try:
+                engine, rid0, restarts, kills = kill_run(seed, path, paged)
+            except Exception:
+                traceback.print_exc()
+                print(f"FAIL {layout} seed={seed}: kill/restore crashed")
+                failures += 1
+                continue
+            total_kills += kills
+            toks, fins = _journal_streams(path)
+            lost = [i for i in range(len(ref))
+                    if len(fins.get(rid0 + i, [])) == 0]
+            dup = [i for i in range(len(ref))
+                   if len(fins.get(rid0 + i, [])) > 1]
+            mismatched = [
+                i for i, rr in enumerate(ref)
+                if fins.get(rid0 + i)
+                and fins[rid0 + i][0]["rsn"] in CLEAN_REASONS
+                and (fins[rid0 + i][0]["rsn"] != rr.finish_reason
+                     or toks.get(rid0 + i, []) != rr.output_tokens)
+            ]
+            resid = check_attribution(engine)
+            print(
+                f"{layout} seed={seed}: kills={kills} restarts={restarts} "
+                f"finished={len(ref) - len(lost)}/{len(ref)} "
+                f"attribution_residual={resid:.2e}"
+            )
+            if lost:
+                print(f"FAIL {layout} seed={seed}: requests {lost} have no "
+                      f"durable finish record (lost)")
+                failures += 1
+            if dup:
+                print(f"FAIL {layout} seed={seed}: requests {dup} finished "
+                      f"more than once (duplicated)")
+                failures += 1
+            if mismatched:
+                print(f"FAIL {layout} seed={seed}: requests {mismatched} "
+                      f"finished normally but diverged from the "
+                      f"uninterrupted reference")
+                failures += 1
+            if resid > ATTRIBUTION_TOL:
+                print(f"FAIL {layout} seed={seed}: SLO attribution residual "
+                      f"{resid} > {ATTRIBUTION_TOL}")
+                failures += 1
+    if total_kills == 0:
+        print("FAIL recovery: no process/kill ever fired — the sweep "
+              "exercised nothing")
+        failures += 1
+    return failures
+
+
+def main(argv=None) -> int:
+    import argparse
+    import tempfile
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--only", choices=("serve", "resume", "recovery"), default=None,
+        help="run a single sweep (default: all three)",
+    )
+    args = ap.parse_args(argv)
+    failures = 0
+    if args.only in (None, "serve"):
+        print(f"serving chaos sweep: seeds {SERVE_SEEDS}, "
+              f"{len(SERVE_SPECS)} fault points armed")
+        failures += serve_sweep()
+    if args.only in (None, "resume"):
+        print(f"early-resume sweep: seeds {RESUME_SEEDS}")
+        failures += resume_sweep()
+    if args.only in (None, "recovery"):
+        print(f"recovery sweep: seeds {RECOVERY_SEEDS}, process/kill armed, "
+              f"paged + dense")
+        with tempfile.TemporaryDirectory() as tmpdir:
+            failures += recovery_sweep(tmpdir)
     if failures:
         print(f"FAIL: {failures} chaos check(s) failed")
         return 1

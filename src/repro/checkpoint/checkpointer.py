@@ -6,7 +6,13 @@ Layout:  <dir>/step_<N>/
 
 Guarantees used by the train loop's failure-recovery path:
   * atomicity     -- written to ``step_<N>.tmp`` then os.rename (POSIX atomic)
+  * durability    -- arrays + manifest are fsync'd, then the directory, so
+                     a torn save can't survive a power loss as a
+                     complete-looking checkpoint (DESIGN.md §11)
   * completeness  -- manifest written last; restore ignores dirs without it
+                     (or with ``complete: false``) and falls back to the
+                     previous step — including past a dir whose arrays are
+                     unreadable despite a valid manifest
   * async         -- ``save(..., blocking=False)`` snapshots to host memory
                      synchronously (device -> np) then writes on a daemon
                      thread, so the train step dispatch is not blocked
@@ -18,10 +24,22 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directories need their entries
+    made durable too — the rename is only atomic, not durable, without
+    it)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -51,14 +69,21 @@ class Checkpointer:
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            arrays = os.path.join(tmp, "arrays.npz")
+            np.savez(arrays, **flat)
+            _fsync_path(arrays)  # arrays durable BEFORE the manifest exists
+            manifest = os.path.join(tmp, "manifest.json")
+            with open(manifest, "w") as f:
                 json.dump(
                     {"step": step, "complete": True, "tree": str(treedef)}, f
                 )
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_path(tmp)  # the dir entries themselves
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
+            _fsync_path(self.directory)  # make the rename durable
             self._gc()
 
         if blocking:
@@ -93,25 +118,49 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, int]:
-        """Restore into the structure/dtypes/shardings of ``template``."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        path = os.path.join(self.directory, f"step_{step:08d}", "arrays.npz")
-        data = np.load(path)
-        leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
-        out = []
-        for path_t, leaf in leaves_t:
-            key = "/".join(str(p) for p in path_t)
-            arr = data[key]
-            if hasattr(leaf, "sharding"):
-                arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
-            out.append(arr)
-        tree = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(template), out
+        """Restore into the structure/dtypes/shardings of ``template``.
+
+        Torn-save tolerant: a ``step_*`` dir whose manifest is missing or
+        says ``complete: false`` is never considered, and one whose arrays
+        turn out unreadable (crash mid-save on a pre-fsync filesystem) is
+        skipped in favour of the previous valid step."""
+        candidates = self.all_steps()
+        if step is not None:
+            candidates = [s for s in candidates if s <= step]
+        if not candidates:
+            raise FileNotFoundError(
+                f"no restorable checkpoint in {self.directory}"
+                + (f" at or before step {step}" if step is not None else "")
+            )
+        errors: list[str] = []
+        for s in reversed(candidates):
+            path = os.path.join(self.directory, f"step_{s:08d}", "arrays.npz")
+            try:
+                with np.load(path) as data:
+                    leaves_t, _ = jax.tree_util.tree_flatten_with_path(
+                        template
+                    )
+                    out = []
+                    for path_t, leaf in leaves_t:
+                        key = "/".join(str(p) for p in path_t)
+                        arr = data[key]
+                        if hasattr(leaf, "sharding"):
+                            arr = jax.device_put(
+                                arr.astype(leaf.dtype), leaf.sharding
+                            )
+                        out.append(arr)
+            except (OSError, KeyError, ValueError,
+                    zipfile.BadZipFile) as e:
+                errors.append(f"step {s}: {e}")
+                continue  # torn/corrupt: fall back to the previous step
+            tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), out
+            )
+            return tree, s
+        raise FileNotFoundError(
+            f"every candidate checkpoint in {self.directory} is "
+            f"unreadable: {'; '.join(errors)}"
         )
-        return tree, step
 
     # -- retention ------------------------------------------------------
     def _gc(self) -> None:

@@ -282,6 +282,7 @@ class SpecInFRuntime:
         decode_microstep_s: float = 0.005,
         gamma_controller: Optional[AdaptiveGammaController] = None,
         faults: Optional[FaultInjector] = None,
+        journal=None,
     ):
         self.train_step = train_step
         self.state = train_state
@@ -329,6 +330,7 @@ class SpecInFRuntime:
         # time.monotonic), and latencies are internally consistent.
         self._vnow = 0.0
         self.core = None
+        self.recovery = None
         if engine is not None:
             engine.clock = lambda: self._vnow
             # Algorithm 1 as the engine core's scheduler policy.  Reusing
@@ -356,6 +358,16 @@ class SpecInFRuntime:
             for cr in self.core.slot_requests.values():
                 cr.arrival_time = 0.0
                 tr.restamp_arrival(cr.request_id, 0.0)
+            # Crash durability (DESIGN.md §11): replay any existing journal
+            # BEFORE fresh submissions, so a restarted runtime re-arms
+            # bubble filling with the previous incarnation's surviving
+            # requests already queued (restamped onto the virtual clock —
+            # replay runs after the restamp loop above, so its shift-based
+            # stamps are not clobbered back to 0), then attach so this
+            # incarnation's lifecycle is journaled in turn.
+            if journal is not None:
+                self.recovery = journal.recover_into(self.core)
+                journal.attach(self.core)
             for r in sorted(
                 online_requests or [], key=lambda r: r.arrival_time
             ):
@@ -367,6 +379,7 @@ class SpecInFRuntime:
                     ),
                     arrival_time=r.arrival_time,
                 )
+        self.journal = journal
 
     # ------------------------------------------------------------------
     def _observe_windows(self, n: int, activity: int = 0):

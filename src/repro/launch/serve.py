@@ -3,6 +3,16 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \\
       --requests 32 --mean-interval-ms 20
 
+Crash-safe serving (DESIGN.md §11) — journal every request lifecycle to an
+append-only write-ahead log, and replay a previous (killed) run's journal
+before submitting fresh work:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --requests 16 \\
+      --journal /tmp/serve.journal.jsonl
+  # ... kill it mid-run, then finish the survivors byte-identically:
+  PYTHONPATH=src python -m repro.launch.serve --smoke --requests 0 \\
+      --journal /tmp/serve.journal.jsonl --restore
+
 All requests are submitted up front (``EngineCore.submit``, ONLINE
 priority, explicit arrival times) and the loop just calls
 ``core.step()``: each quantum drains every admissible arrived request
@@ -89,6 +99,24 @@ def summarize(engine: InferenceEngine) -> list:
             f"[serve] proposer routing: switches={switches} "
             f"no_match_fallbacks={fallbacks}"
         )
+    # crash durability (DESIGN.md §11): journal I/O + replay recovery
+    appends = m.counter("journal/appends").value
+    if appends:
+        lines.append(
+            f"[serve] journal: appends={appends} "
+            f"fsyncs={m.counter('journal/fsyncs').value} "
+            f"bytes={m.counter('journal/bytes').value}"
+        )
+    restores = m.counter("recovery/restores").value
+    if restores:
+        lines.append(
+            f"[serve] recovery: restores={restores} "
+            f"requeued={m.counter('recovery/requeued_waiting').value} "
+            f"resumed={m.counter('recovery/resumed_inflight').value} "
+            f"replayed_tokens={m.counter('recovery/replayed_tokens').value} "
+            f"skipped_finished="
+            f"{m.counter('recovery/skipped_finished').value}"
+        )
     return lines
 
 
@@ -110,6 +138,23 @@ def main() -> None:
     ap.add_argument(
         "--trace", metavar="PREFIX", default=None,
         help="write the step trace to PREFIX.jsonl + PREFIX.chrome.json",
+    )
+    ap.add_argument(
+        "--journal", metavar="PATH", default=None,
+        help="write-ahead request journal (append-only JSONL, DESIGN.md "
+        "§11): submits, transitions, token deltas, and finishes are "
+        "logged so a killed run can be recovered with --restore",
+    )
+    ap.add_argument(
+        "--journal-fsync-interval", type=int, default=8,
+        help="group-commit interval: fsync the journal every N records "
+        "(a crash loses at most the last N appends)",
+    )
+    ap.add_argument(
+        "--restore", action="store_true",
+        help="replay the --journal file into the engine before submitting "
+        "fresh work: a previous run's unfinished requests re-enter the "
+        "queue (mid-flight ones as PREEMPTED) and finish byte-identically",
     )
     ap.add_argument(
         "--proposer", choices=("auto", "draft", "ngram", "none"),
@@ -143,6 +188,26 @@ def main() -> None:
     engine.obs.tracer.enabled = args.trace is not None
     core = engine.core
 
+    journal = None
+    if args.journal is not None:
+        from repro.resilience import RequestJournal
+
+        journal = RequestJournal(
+            args.journal, fsync_interval=args.journal_fsync_interval
+        )
+        if args.restore:
+            report = journal.recover_into(core)
+            print(
+                f"[serve] restored {report.restored} requests "
+                f"({report.resumed_inflight} mid-flight, "
+                f"{report.replayed_tokens} tokens replayed, "
+                f"{report.skipped_finished} already finished) from "
+                f"{args.journal}"
+            )
+        journal.attach(core)
+    elif args.restore:
+        raise SystemExit("--restore requires --journal PATH")
+
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(
         rng.exponential(args.mean_interval_ms / 1e3, args.requests)
@@ -166,6 +231,8 @@ def main() -> None:
         out = core.step()
         if out.k == 0 and not out.admitted:
             time.sleep(0.001)  # idle until the next arrival
+    if journal is not None:
+        journal.close()
     total_tokens = sum(len(r.output_tokens) for r in requests)
     dt = time.monotonic() - t0
     print(

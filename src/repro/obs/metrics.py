@@ -103,6 +103,21 @@ STABLE_NAMES = {
     "fault/ladder_steps/shed_online": "counter",
     "fault/ladder_stage": "gauge",
     "fault/revocation_overrun_s": "histogram",
+    "fault/decays": "counter",
+    # crash durability: write-ahead journal + replay recovery (DESIGN.md §11)
+    "journal/appends": "counter",
+    "journal/fsyncs": "counter",
+    "journal/bytes": "counter",
+    "recovery/restores": "counter",
+    "recovery/replayed_tokens": "counter",
+    "recovery/requeued_waiting": "counter",
+    "recovery/resumed_inflight": "counter",
+    "recovery/skipped_finished": "counter",
+    "recovery/torn_tail": "counter",
+    "recovery/duration_s": "gauge",
+    "recovery/snapshot_saves": "counter",
+    "recovery/snapshot_nodes": "counter",
+    "recovery/snapshot_discarded": "counter",
     # per-quantum gauges
     "core/queue_depth/online": "gauge",
     "core/queue_depth/offline": "gauge",

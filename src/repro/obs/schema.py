@@ -11,8 +11,8 @@ or mistyped required fields are errors.
 """
 from __future__ import annotations
 
-__all__ = ["EVENT_SCHEMAS", "validate_event", "validate_events",
-           "validate_jsonl"]
+__all__ = ["EVENT_SCHEMAS", "INSTANT_ARG_SCHEMAS", "SPAN_ARG_SCHEMAS",
+           "validate_event", "validate_events", "validate_jsonl"]
 
 
 def NULLABLE(t):
@@ -50,6 +50,16 @@ TRANSITION_STATES = {
     "finished_expired", "finished_error",
 }
 
+#: span/instant names with a pinned ``args`` contract (DESIGN.md §11).
+#: Other names stay free-form; these are recovery's attribution-critical
+#: events, so their args are part of the schema.
+SPAN_ARG_SCHEMAS = {
+    "recovery": {"requests": int, "tokens": int, "clock_shift": _NUM},
+}
+INSTANT_ARG_SCHEMAS = {
+    "arrival_restamp": {"request_id": int, "old": _NUM, "new": _NUM},
+}
+
 
 def _check_fields(ev: dict, schema: dict, where: str, errors: list) -> None:
     for field, spec in schema.items():
@@ -84,6 +94,14 @@ def validate_event(ev, where: str = "event") -> list:
             errors.append(f"{where}: unknown state {ev['to']!r}")
         if ev["frm"] is not None and ev["frm"] not in TRANSITION_STATES:
             errors.append(f"{where}: unknown state {ev['frm']!r}")
+    elif kind == "span":
+        args_schema = SPAN_ARG_SCHEMAS.get(ev["name"])
+        if args_schema is not None:
+            _check_fields(ev["args"], args_schema, f"{where}.args", errors)
+    elif kind == "instant":
+        args_schema = INSTANT_ARG_SCHEMAS.get(ev["name"])
+        if args_schema is not None:
+            _check_fields(ev["args"], args_schema, f"{where}.args", errors)
     return errors
 
 

@@ -7,6 +7,10 @@ Three pieces, all host-side and deterministic on the virtual clock:
 * ``degradation`` — the hysteretic overload ladder ``EngineCore``
   consults each quantum (spec off -> k shrink -> offline shedding ->
   online deadline shedding);
+* ``journal`` / ``snapshot`` — the crash-durability layer (DESIGN.md
+  §11): a write-ahead request journal with deterministic replay
+  recovery, plus an optional warm-state radix-cache snapshot through
+  the training ``Checkpointer``;
 * the containment machinery itself lives where the faults land:
   per-slot NaN screens in the fused loops (``serving/engine.py``),
   ``PageAllocError`` handling in ``serving/kv_pool.py``, revocable
@@ -22,13 +26,25 @@ from repro.resilience.faults import (  # noqa: F401
     FAULT_POINTS,
     FaultInjector,
     FaultSpec,
+    ProcessKilled,
 )
+from repro.resilience.journal import (  # noqa: F401
+    RecoveryReport,
+    RequestJournal,
+    read_journal,
+)
+from repro.resilience.snapshot import EngineSnapshot  # noqa: F401
 
 __all__ = [
     "FAULT_POINTS",
+    "EngineSnapshot",
     "FaultInjector",
     "FaultSpec",
     "LadderConfig",
     "LadderStage",
     "OverloadLadder",
+    "ProcessKilled",
+    "RecoveryReport",
+    "RequestJournal",
+    "read_journal",
 ]

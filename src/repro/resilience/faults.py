@@ -22,6 +22,11 @@ Fault points wired into the stack:
 ``core/step_overrun``     inflate a quantum's step cost (slow-step fault)
 ``runtime/early_resume``  training resumes before the predicted bubble
                           end; the runtime arms the grants' revocation
+``process/kill``          sever the engine process: ``EngineCore.step()``
+                          raises ``ProcessKilled`` between quanta or
+                          mid-quantum (after device work, before the
+                          journal append) — recovery replays the
+                          write-ahead journal (DESIGN.md §11)
 ========================  =================================================
 
 Use ``FaultSpec`` to arm a point::
@@ -42,7 +47,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["FaultInjector", "FaultSpec", "FAULT_POINTS"]
+__all__ = ["FaultInjector", "FaultSpec", "FAULT_POINTS", "ProcessKilled"]
 
 #: the named fault points the serving stack consults (documentation +
 #: validation surface; ``FaultSpec`` for an unknown point is an error)
@@ -52,7 +57,18 @@ FAULT_POINTS = (
     "core/revoke_mid_quantum",
     "core/step_overrun",
     "runtime/early_resume",
+    "process/kill",
 )
+
+
+class ProcessKilled(RuntimeError):
+    """Simulated process death (the ``process/kill`` fault point).
+
+    Raised out of ``EngineCore.step()``; the in-memory engine/core pair is
+    unusable afterwards and must be abandoned.  Chaos harnesses catch it,
+    truncate the request journal to its fsynced prefix
+    (``RequestJournal.crash``), and rebuild a fresh engine via
+    ``RequestJournal.recover_into`` (DESIGN.md §11)."""
 
 
 @dataclasses.dataclass(frozen=True)

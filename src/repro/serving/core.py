@@ -156,6 +156,11 @@ class EngineRequest:
     _internal: Optional[Request] = None  # engine-side record while RUNNING
     _consumed: int = 0  # tokens of _internal.generated already absorbed
     _ttft_reported: bool = False
+    #: consecutive clean decode quanta since the last quarantine — once it
+    #: reaches ``EngineCore.fault_decay_quanta`` the fault counter resets,
+    #: so transient faults spread across a long life never accumulate into
+    #: FINISHED_ERROR (DESIGN.md §9)
+    _clean_quanta: int = 0
 
     @property
     def remaining_budget(self) -> int:
@@ -555,6 +560,16 @@ class EngineCore:
         #: waits ``fault_backoff_s * 2**(n-1)`` engine-clock seconds
         self.max_fault_retries = 3
         self.fault_backoff_s = 0.01
+        #: consecutive clean decode quanta after which a request's fault
+        #: counter resets (0 disables decay — the pre-decay lifetime-
+        #: counter behaviour)
+        self.fault_decay_quanta = 8
+        #: optional write-ahead request journal
+        #: (``repro.resilience.journal.RequestJournal.attach``): submits,
+        #: transitions, token deltas, and finishes are logged append-only
+        #: so a killed engine can replay them into a fresh core
+        #: (DESIGN.md §11)
+        self.journal = None
 
     # ------------------------------------------------------------------
     # Submission / queries
@@ -593,6 +608,8 @@ class EngineCore:
             cr.request_id, None, "waiting", arrival_time,
             priority=priority.value,
         )
+        if self.journal is not None:
+            self.journal.record_submit(cr, self.engine.clock())
         return cr
 
     def slot_of(self, req: EngineRequest) -> Optional[int]:
@@ -633,8 +650,15 @@ class EngineCore:
         g = grant if grant is not None else Grant()
         if g.now is None:
             g = dataclasses.replace(g, now=self.engine.clock())
-        self._finished_buffer = []
         eng = self.engine
+        if (eng.fault_injector is not None
+                and eng.fault_injector.should_fire("process/kill")):
+            # lazy import: repro.resilience's package init imports this
+            # module, so a top-level import would cycle
+            from repro.resilience.faults import ProcessKilled
+
+            raise ProcessKilled("injected process death between quanta")
+        self._finished_buffer = []
         active = list(self.slot_requests.values())
         base = {cr.request_id: len(cr.output_tokens) for cr in active}
         touched = {cr.request_id: cr for cr in active}
@@ -773,7 +797,26 @@ class EngineCore:
                     priority=cr.priority.value,
                 )
             self._absorb_running(slot, cr)
+        if inj is not None and inj.should_fire("process/kill"):
+            # mid-quantum death: device work ran and its tokens were
+            # absorbed into host state, but the journal append below never
+            # happens — replay-resume regenerates them byte-identically
+            from repro.resilience.faults import ProcessKilled
+
+            raise ProcessKilled("injected process death mid-quantum")
         m = self.obs.metrics
+        if self.fault_decay_quanta and out.k > 0:
+            # fault-counter decay (DESIGN.md §9): a quarantined request
+            # that then decodes N consecutive clean quanta earns its
+            # retry budget back — transient faults spread across a long
+            # life must not escalate to FINISHED_ERROR
+            for cr in self.slot_requests.values():
+                if cr.faults and cr.state is RequestState.RUNNING:
+                    cr._clean_quanta += 1
+                    if cr._clean_quanta >= self.fault_decay_quanta:
+                        cr.faults = 0
+                        cr._clean_quanta = 0
+                        m.counter("fault/decays").inc()
         out.finished = list(self._finished_buffer)
         for cr in out.finished:
             touched.setdefault(cr.request_id, cr)
@@ -808,6 +851,8 @@ class EngineCore:
                 request_id=rid, priority=cr.priority, new_tokens=list(new),
                 state=cr.state, finish_reason=cr.finish_reason, ttft_s=ttft,
             ))
+        if self.journal is not None:
+            self.journal.record_step(self, out)
         self._record_quantum(g, plan, out, ran_slots)
         self.policy.observe(out)
         return out
@@ -909,6 +954,10 @@ class EngineCore:
             except ValueError:
                 pass
         self._finish(req, RequestState.FINISHED_ABORTED, self.engine.clock())
+        if self.journal is not None:
+            # abort() runs outside step(), so the end-of-quantum journal
+            # hook never sees this finish
+            self.journal.record_finish(req, self.engine.clock())
 
     # ------------------------------------------------------------------
     def preempt(self, target: Union[int, EngineRequest]) -> Optional[EngineRequest]:
@@ -1162,6 +1211,7 @@ class EngineCore:
         new = self._collect(cr)
         cr._internal = None
         cr.faults += 1
+        cr._clean_quanta = 0
         now = self.engine.clock()
         if self._apply_stop(cr, new):
             # the good tokens absorbed before the fault carried a stop

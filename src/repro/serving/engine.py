@@ -85,6 +85,17 @@ from repro.serving.kv_pool import PageAllocError, PagePool, RadixCache
 
 _req_counter = itertools.count()
 
+
+def advance_request_ids(floor: int) -> None:
+    """Ensure future auto-assigned request ids are ``>= floor``.
+
+    Journal recovery (DESIGN.md §11) re-creates requests with their
+    journaled ids; without bumping the process-wide counter past them, a
+    fresh ``submit()`` could collide with a replayed id."""
+    global _req_counter
+    nxt = next(_req_counter)
+    _req_counter = itertools.count(max(nxt, int(floor)))
+
 #: Fused-loop sizes the engine compiles on demand; callers bucket their k so
 #: the set of compiled programs stays bounded (DESIGN.md §2).
 DECODE_K_BUCKETS = (1, 2, 4, 8)
@@ -645,6 +656,49 @@ class InferenceEngine:
                 1 for p in shared if self.pool.refcount[p] == 1
             )
         return total_pages - len(shared) <= self.pool.available + evictable
+
+    def export_prefix_pages(self):
+        """Warm-state snapshot export (DESIGN.md §11): the radix cache's
+        tree structure plus the KV contents of its pages, as
+        ``(nodes, k, v)`` with ``k``/``v`` shaped ``[L, N, page, kvH, hd]``
+        gathered in node order.  None on dense engines or when the cache
+        is empty — the snapshot is strictly optional warm state."""
+        if self.prefix_cache is None:
+            return None
+        nodes = self.prefix_cache.export_nodes()
+        if not nodes:
+            return None
+        pages = jnp.asarray([page for _, _, page in nodes], jnp.int32)
+        layers = self.cache["layers"]
+        return nodes, layers["k"][:, pages], layers["v"][:, pages]
+
+    def import_prefix_pages(self, nodes, k, v) -> int:
+        """Warm the radix cache from an exported snapshot: allocate fresh
+        pages (evicting colder entries if needed), write the saved KV
+        contents into them, and rebuild the tree.  Nodes that don't fit
+        are dropped from the tail — warm state is best-effort, never
+        required for correctness.  Returns the nodes loaded."""
+        if self.prefix_cache is None or not nodes:
+            return 0
+        keep = len(nodes)
+        if not self._ensure_capacity(keep):
+            # drop whole subtrees from the tail: export order is
+            # parents-first, so a prefix of it is still a valid forest
+            keep = self.pool.available
+            nodes = nodes[:keep]
+        if keep == 0:
+            return 0
+        pages = self.pool.alloc(keep)
+        idx = jnp.asarray(pages, jnp.int32)
+        dtype = self.cache["layers"]["k"].dtype
+        layers = self.cache["layers"]
+        layers["k"] = layers["k"].at[:, idx].set(
+            jnp.asarray(k[:, :keep], dtype)
+        )
+        layers["v"] = layers["v"].at[:, idx].set(
+            jnp.asarray(v[:, :keep], dtype)
+        )
+        return self.prefix_cache.load_nodes(nodes, pages)
 
     def _sync_block_tables(self) -> None:
         self.cache["block_tables"] = jnp.asarray(self._bt_host)

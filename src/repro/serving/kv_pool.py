@@ -242,6 +242,51 @@ class RadixCache:
             node = child
 
     # ------------------------------------------------------------------
+    def export_nodes(self) -> list[tuple[int, tuple, int]]:
+        """Flatten the tree for a warm-state snapshot (DESIGN.md §11):
+        ``(parent_index, chunk, page)`` per node, parents strictly before
+        children (the root is implicit at index -1).  ``page`` ids are
+        only meaningful against this pool instance — a restore allocates
+        fresh pages and uses them to index the saved KV contents."""
+        nodes: list[tuple[int, tuple, int]] = []
+        stack = [(-1, child) for child in self.root.children.values()]
+        while stack:
+            parent_idx, node = stack.pop()
+            idx = len(nodes)
+            nodes.append((parent_idx, node.chunk, node.page))
+            stack.extend((idx, c) for c in node.children.values())
+        return nodes
+
+    def load_nodes(
+        self, nodes: Sequence[tuple[int, tuple, int]], pages: Sequence[int]
+    ) -> int:
+        """Rebuild exported nodes onto THIS pool: ``pages[i]`` is the
+        freshly-allocated physical page for ``nodes[i]`` (already holding
+        one reference from ``pool.alloc`` — that reference becomes the
+        tree's own hold, so restored pages start evictable).  Nodes whose
+        chunk is already cached are skipped and their page freed; returns
+        the nodes actually added."""
+        by_idx: dict = {}
+        added = 0
+        for i, (parent_idx, chunk, _) in enumerate(nodes):
+            parent = self.root if parent_idx < 0 else by_idx.get(parent_idx)
+            if parent is None:
+                self.pool.decref([pages[i]])
+                continue  # parent was a duplicate resolved to nothing
+            chunk = tuple(chunk)
+            child = parent.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, pages[i], parent)
+                parent.children[chunk] = child
+                self.pages_cached += 1
+                added += 1
+            else:
+                self.pool.decref([pages[i]])
+            self._touch(child)
+            by_idx[i] = child
+        return added
+
+    # ------------------------------------------------------------------
     def evictable_pages(self) -> int:
         """Pages reclaimable by eviction (cached pages only the tree holds)."""
         count = 0
